@@ -1,0 +1,55 @@
+"""Paper Fig. 14: single-request cumulative latency with a failure at
+decode step 800 — OPT-66B and BLOOM-176B, TP8 PP2, 500-token prompt,
+1500-token generation.  Compares non-fault-tolerant restart, DejaVu
+(KV-cache replication), and R2CCL's transparent migration.
+
+Paper: baseline 1.62x / 1.79x; DejaVu 1.14-1.33x; R2CCL 0.71-1.58%
+overhead => 8.6x and 47x lower recovery overhead than DejaVu."""
+
+from __future__ import annotations
+
+from repro.core.comm_sim import ServeJob, request_latency_under_failure
+from repro.core.failures import single_nic_failure
+from repro.core.topology import IB_NIC_BW, make_cluster
+
+from .common import Reporter
+
+
+def run() -> None:
+    r = Reporter("dejavu_fig14")
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    fail = single_nic_failure(0, 0)
+
+    for params, label, paper_base, paper_dv, paper_r2 in [
+        (66e9, "opt66b", 1.62, (1.14, 1.33), 0.0071),
+        (176e9, "bloom176b", 1.79, (1.14, 1.33), 0.0158),
+    ]:
+        job = ServeJob(params=params, tp=8, pp=2, prompt_tokens=500,
+                       gen_tokens=1500)
+        out = {}
+        for strat in ("restart", "dejavu", "r2ccl"):
+            out[strat] = request_latency_under_failure(
+                job, cluster, fail, strategy=strat, fail_at_decode_step=800,
+                restart_delay=5.0)     # DejaVu-style worker restart, not the
+                                       # 35 s full-engine relaunch of Fig.11
+        r.row(f"{label}_restart_ratio", 1.0 + out["restart"]["overhead"],
+              f"paper: {paper_base}x")
+        r.row(f"{label}_dejavu_ratio", 1.0 + out["dejavu"]["overhead"],
+              f"paper: {paper_dv[0]}-{paper_dv[1]}x")
+        r.row(f"{label}_r2ccl_overhead", out["r2ccl"]["overhead"],
+              f"paper: {paper_r2:.2%} (testbed noise floor; our physical "
+              "model has no noise term, so ours is smaller)")
+        ratio = out["dejavu"]["overhead"] / max(out["r2ccl"]["overhead"], 1e-9)
+        r.row(f"{label}_dejavu_over_r2ccl_ge_paper",
+              float(ratio >= (8.6 if label == "opt66b" else 47.0)),
+              f"ratio={ratio:.0f}; paper claims 8.6x/47x — validated as >=")
+        r.row(f"{label}_baseline_over_r2ccl_ge_paper",
+              float(out["restart"]["overhead"] /
+                    max(out["r2ccl"]["overhead"], 1e-9) >=
+                    (38.9 if label == "opt66b" else 113.0)),
+              "paper: 38.9x / 113x — validated as >=")
+    r.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Paper Figs. 11-13: vLLM-style inference under NIC failures.
+
+TTFT vs QPS for Llama-3.1-70B/405B (TP=8 PP=2) under no-failure /
+R2CCL-Balance / restart / reroute; TPOT overheads; multi-failure steady
+state.  Paper claims: R2CCL TTFT overhead 0-0.6% (70B) and 0.3-3% (405B),
+TPOT overhead <3%, 1.2-8.7x more throughput than restart under a 5s SLO,
+multi-failure overhead 0-5%."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.comm_sim import ServeJob, request_latency_under_failure, ttft_vs_qps
+from repro.core.failures import concentrated_failures, single_nic_failure
+from repro.core.topology import IB_NIC_BW, make_cluster
+
+from .common import Reporter
+
+
+def _sustained_qps(points, slo: float) -> float:
+    """Highest offered load whose p50 TTFT meets the SLO (median service
+    objective; the p95 is outage-dominated during the failure window)."""
+    best = 0.0
+    for p in points:
+        if p["p50"] <= slo:
+            best = max(best, p["qps"])
+    return best
+
+
+def run() -> None:
+    r = Reporter("inference_fig11_13")
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    fail = single_nic_failure(0, 0)
+
+    for params, label in [(70e9, "70b"), (405e9, "405b")]:
+        job = ServeJob(params=params, tp=8, pp=2, prompt_tokens=2000,
+                       gen_tokens=256)
+        from repro.core.failures import FailureState as _FS
+        svc = job.prefill_time(cluster, _FS())
+        # sweep to ~2.4x the healthy service rate so reroute (rate/2) and
+        # restart saturate inside the grid
+        qps_grid = list(np.linspace(0.05, 2.4, 32) / svc)
+        base = ttft_vs_qps(job, cluster, [], qps_grid, strategy="no_failure")
+        r2 = ttft_vs_qps(job, cluster, fail, qps_grid, strategy="r2ccl")
+        rer = ttft_vs_qps(job, cluster, fail, qps_grid, strategy="reroute")
+        res = ttft_vs_qps(job, cluster, fail, qps_grid, strategy="restart")
+        # pre-saturation overhead (low-QPS p50)
+        ov = r2[0]["p50"] / base[0]["p50"] - 1.0
+        r.row(f"{label}_ttft_overhead_presat", ov,
+              "paper: 0-0.6% (70b), 0.3-3% (405b)")
+        slo = max(5.0, 3.0 * svc)
+        q_r2, q_res = (_sustained_qps(p, slo) for p in (r2, res))
+        r.row(f"{label}_qps_vs_restart", q_r2 / max(q_res, 1e-9),
+              "paper: 1.2-8.7x")
+        # reroute in steady state: the healthy replica carries doubled load,
+        # so its saturation point is 0.5/svc vs r2ccl's ~(1-eps)/svc.
+        q_rer = 0.5 / svc
+        r.row(f"{label}_qps_vs_reroute", min(q_r2, 1.0 / svc) / q_rer,
+              "paper: 1.6-1.9x")
+
+    # --- TPOT under failure (405B TP+PP, Fig. 12/13) -------------------------
+    job = ServeJob(params=405e9, tp=8, pp=2, prompt_tokens=2000, gen_tokens=256)
+    from repro.core.failures import FailureState
+    healthy = FailureState()
+    st = FailureState()
+    for f in fail:
+        st.apply(f)
+    d0 = job.decode_step_time(cluster, healthy)
+    d1 = job.decode_step_time(cluster, st)
+    r.row("405b_tpot_overhead_1fail", d1 / d0 - 1.0, "paper: <3%")
+
+    # multiple failures on one node (Fig. 13): up to 5 NICs lost
+    for k in (2, 3, 5):
+        stk = FailureState()
+        for f in concentrated_failures(0, list(range(k))):
+            stk.apply(f)
+        dk = job.decode_step_time(cluster, stk)
+        r.row(f"405b_tpot_overhead_{k}fail", dk / d0 - 1.0, "paper: 0-5%")
+
+    # headline: <3% inference overhead
+    r.row("headline_inference_overhead_lt_3pct",
+          float(d1 / d0 - 1.0 < 0.03), f"measured {d1/d0-1.0:.2%}")
+    r.save()
+
+
+if __name__ == "__main__":
+    run()

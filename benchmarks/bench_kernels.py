@@ -1,0 +1,53 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle on CPU.
+
+Wall-clock on CPU is NOT the TPU performance story (interpret mode runs the
+kernel body in Python); the purpose here is (a) correctness at benchmark
+shapes and (b) the oracle's jit path timing, which the roofline analysis
+uses for structural comparisons."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import Reporter, timer
+
+
+def run() -> None:
+    r = Reporter("kernels_micro")
+    key = jax.random.PRNGKey(0)
+    B, T, KVH, G, D = 1, 512, 2, 2, 64
+    q = jax.random.normal(key, (B, T, KVH, G, D), jnp.float32)
+    k = jax.random.normal(key, (B, T, KVH, D), jnp.float32)
+    v = jax.random.normal(key, (B, T, KVH, D), jnp.float32)
+
+    o_ref = ref.reference_attention(q, k, v)
+    o_pal = ops.flash_attention(q, k, v, q_block=128, kv_block=128)
+    r.row("flash_attn_maxerr", float(jnp.abs(o_ref - o_pal).max()),
+          f"shape B{B} T{T} KVH{KVH} G{G} D{D}")
+    t = timer(lambda: ref.reference_attention(q, k, v).block_until_ready(),
+              repeats=3)
+    r.row("ref_attn_cpu_us", t * 1e6, "jnp oracle wall time")
+
+    C, M = 16, 8192
+    local = jax.random.normal(key, (C, M))
+    recv = jax.random.normal(jax.random.PRNGKey(1), (C, M))
+    seg = jnp.arange(C) % 2
+    acc = jnp.arange(C) % 3 == 0
+    o1 = ops.chunk_combine(local, recv, seg, acc)
+    o2 = ref.reference_chunk_combine(local, recv, seg.astype(bool), acc)
+    r.row("chunk_combine_maxerr", float(jnp.abs(o1 - o2).max()), "")
+
+    Bs, Ts, W = 4, 256, 128
+    a = jax.random.uniform(key, (Bs, Ts, W), minval=0.5, maxval=0.999)
+    x = jax.random.normal(key, (Bs, Ts, W))
+    o1 = ops.lru_scan(a, x)
+    o2 = ref.reference_lru_scan(a, x, jnp.zeros((Bs, W)))
+    r.row("lru_scan_maxerr", float(jnp.abs(o1 - o2).max()), "")
+    r.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,37 @@
+"""Shared benchmark helpers: CSV rows + JSON artifacts."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+class Reporter:
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple[str, float, str]] = []
+        self.data: dict[str, Any] = {}
+
+    def row(self, metric: str, value: float, derived: str = "") -> None:
+        self.rows.append((metric, value, derived))
+        print(f"{self.name},{metric},{value:.6g},{derived}")
+
+    def save(self) -> None:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        with open(os.path.join(OUT_DIR, f"{self.name}.json"), "w") as f:
+            json.dump({"rows": [list(r) for r in self.rows], **self.data}, f,
+                      indent=1, default=str)
+
+
+def timer(fn, *args, repeats: int = 3, **kw) -> float:
+    fn(*args, **kw)                       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / repeats

@@ -1,0 +1,60 @@
+"""Benchmark driver — one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only <name>] [--fast]
+
+Prints ``name,metric,value,derived`` CSV and writes per-benchmark JSON to
+experiments/bench/.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+BENCHES = [
+    ("partition", "bench_partition", "Appendix A: Y*, threshold, Fig.5 traffic"),
+    ("busbw", "bench_allreduce_busbw", "Fig.15 AllReduce bus bandwidth"),
+    ("collectives", "bench_collectives", "Fig.16 AG/RS/SendRecv under failure"),
+    ("training", "bench_training", "Fig.7 Megatron testbed overheads"),
+    ("scaling", "bench_scaling", "Fig.8/9 7B scaling + 175B/RLHF vs AdapCC"),
+    ("multi_failure", "bench_multi_failure", "Fig.10 Monte Carlo k failures"),
+    ("inference", "bench_inference", "Fig.11-13 TTFT/TPOT under failure"),
+    ("dejavu", "bench_dejavu", "Fig.14 DejaVu comparison"),
+    ("detection", "bench_detection", "Sec.4 detection + migration latency"),
+    ("kernels", "bench_kernels", "Pallas kernels vs oracle"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="reduce Monte Carlo trials")
+    args = ap.parse_args()
+
+    print("benchmark,metric,value,derived")
+    failures = []
+    for name, module, desc in BENCHES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{module}", fromlist=["run"])
+            if name == "multi_failure" and args.fast:
+                mod.run(trials=10)
+            else:
+                mod.run()
+            print(f"# {name} ({desc}) done in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr)
+    if failures:
+        for n, e in failures:
+            print(f"FAILED,{n},0,{e}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

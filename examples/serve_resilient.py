@@ -1,0 +1,54 @@
+"""Serving through NIC failures: compare the four strategies of the paper's
+inference evaluation (restart / reroute / DejaVu-style replication / R2CCL
+transparent migration) on a real decode loop.
+
+  PYTHONPATH=src python examples/serve_resilient.py
+"""
+
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.core.failures import Failure, FailureType
+from repro.models import get_smoke_config, init_model
+from repro.serving import Request, ServingEngine
+
+
+def main() -> None:
+    cfg = get_smoke_config("glm4-9b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 24) for _ in range(4)]
+    failure = Failure(FailureType.NIC_HARDWARE, 0, 2)
+
+    baseline = None
+    print(f"{'strategy':10s} {'total(s)':>9s} {'ttft(ms)':>9s} "
+          f"{'tpot(ms)':>9s} {'overhead':>9s}  tokens-match")
+    for strategy in ("r2ccl", "dejavu", "reroute", "restart"):
+        engine = ServingEngine(cfg, params, context_len=96, strategy=strategy)
+        reqs = [Request(prompt=p, max_new_tokens=10) for p in prompts]
+        res = engine.run_batch(reqs, fail_at_step=4, failure=failure)
+        if baseline is None:
+            healthy_engine = ServingEngine(cfg, params, context_len=96,
+                                           strategy="r2ccl")
+            healthy = healthy_engine.run_batch(
+                [Request(prompt=p, max_new_tokens=10) for p in prompts])
+            baseline = healthy[0]
+            print(f"{'no-failure':10s} {baseline.total_latency:9.3f} "
+                  f"{baseline.ttft*1e3:9.1f} {baseline.tpot*1e3:9.1f} "
+                  f"{'—':>9s}  —")
+        r = res[0]
+        ov = r.total_latency / baseline.total_latency - 1.0
+        match = all(a.tokens == b.tokens for a, b in zip(res, healthy))
+        print(f"{strategy:10s} {r.total_latency:9.3f} {r.ttft*1e3:9.1f} "
+              f"{r.tpot*1e3:9.1f} {ov:9.1%}  {match}")
+
+    print("\nR2CCL keeps serving with near-zero overhead; restart pays the "
+          "35 s engine relaunch plus full reprocessing (paper Fig. 11/14).")
+
+
+if __name__ == "__main__":
+    main()

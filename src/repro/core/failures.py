@@ -1,0 +1,137 @@
+"""Failure model for R2CCL (paper Table 2 + Section 2.2).
+
+Defines the failure taxonomy, injection schedules, and the ``FailureState``
+that the planner / schedule builders consume.  This is the single source of
+truth for "what is currently broken" across the detection simulator, the JAX
+collective layer, and the benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import random
+from typing import Iterable, Sequence
+
+
+class FailureType(enum.Enum):
+    NIC_HARDWARE = "nic_hardware"          # NIC/port dead (supported)
+    LINK_DOWN = "link_down"                # cable / ToR port (supported)
+    QP_ERROR = "qp_error"                  # transport-level error (supported)
+    LINK_FLAPPING = "link_flapping"        # partial: only if it surfaces a timeout
+    CRC_ERROR = "crc_error"                # partial
+    NIC_DRIVER = "nic_driver"              # supported if process survives
+    NIC_FIRMWARE = "nic_firmware"          # supported
+    PCIE = "pcie"                          # partial: subset of NICs
+    GPU_NIC_PATH = "gpu_nic_path"          # partial: GPUDirect degraded
+    NVLINK = "nvlink"                      # out of scope
+    SWITCH_OUTAGE = "switch_outage"        # out of scope
+    PROCESS_CRASH = "process_crash"        # out of scope
+
+
+#: Failure types R2CCL can hot-repair (paper Table 2).
+SUPPORTED = {
+    FailureType.NIC_HARDWARE,
+    FailureType.LINK_DOWN,
+    FailureType.QP_ERROR,
+    FailureType.NIC_DRIVER,
+    FailureType.NIC_FIRMWARE,
+}
+#: Supported only when they escalate to an in-flight transport failure.
+PARTIAL = {
+    FailureType.LINK_FLAPPING,
+    FailureType.CRC_ERROR,
+    FailureType.PCIE,
+    FailureType.GPU_NIC_PATH,
+}
+OUT_OF_SCOPE = {
+    FailureType.NVLINK,
+    FailureType.SWITCH_OUTAGE,
+    FailureType.PROCESS_CRASH,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Failure:
+    """One failure event."""
+
+    ftype: FailureType
+    node: int
+    rail: int                       # -1 => whole-node scope (out-of-scope types)
+    at_time: float = 0.0            # seconds into the run (for injection)
+    escalates: bool = True          # for PARTIAL types: does it surface a timeout?
+    recovers_at: float | None = None
+
+    @property
+    def nic_key(self) -> tuple[int, int]:
+        return (self.node, self.rail)
+
+    @property
+    def supported(self) -> bool:
+        if self.ftype in SUPPORTED:
+            return True
+        if self.ftype in PARTIAL:
+            return self.escalates
+        return False
+
+
+@dataclasses.dataclass
+class FailureState:
+    """The set of currently-failed NICs, as seen by the control plane."""
+
+    failed_nics: set[tuple[int, int]] = dataclasses.field(default_factory=set)
+    unsupported: list[Failure] = dataclasses.field(default_factory=list)
+
+    def apply(self, failure: Failure) -> bool:
+        """Apply a failure; returns True if R2CCL can handle it."""
+        if not failure.supported:
+            self.unsupported.append(failure)
+            return False
+        self.failed_nics.add(failure.nic_key)
+        return True
+
+    def recover(self, nic_key: tuple[int, int]) -> None:
+        self.failed_nics.discard(nic_key)
+
+    def failed_on_node(self, node: int) -> set[int]:
+        return {r for (n, r) in self.failed_nics if n == node}
+
+    def degraded_nodes(self) -> list[int]:
+        return sorted({n for (n, _) in self.failed_nics})
+
+    def copy(self) -> "FailureState":
+        return FailureState(set(self.failed_nics), list(self.unsupported))
+
+
+# ---------------------------------------------------------------------------
+# Injection schedules (used by benchmarks & examples)
+# ---------------------------------------------------------------------------
+
+def single_nic_failure(node: int = 0, rail: int = 0, at_time: float = 0.0) -> list[Failure]:
+    return [Failure(FailureType.NIC_HARDWARE, node, rail, at_time)]
+
+
+def concentrated_failures(node: int, rails: Sequence[int], at_time: float = 0.0) -> list[Failure]:
+    return [Failure(FailureType.NIC_HARDWARE, node, r, at_time) for r in rails]
+
+
+def random_failures(
+    k: int,
+    num_nodes: int,
+    rails_per_node: int = 8,
+    seed: int = 0,
+    at_time: float = 0.0,
+) -> list[Failure]:
+    """k distinct random NIC failures across the cluster (paper Fig. 10 setup)."""
+    rng = random.Random(seed)
+    all_nics = [(n, r) for n in range(num_nodes) for r in range(rails_per_node)]
+    picks = rng.sample(all_nics, k)
+    return [Failure(FailureType.NIC_HARDWARE, n, r, at_time) for (n, r) in picks]
+
+
+def rail_mismatch_failures(node_a: int, node_b: int, rail_a: int, rail_b: int) -> list[Failure]:
+    """The Section-6 motivating pattern: adjacent nodes lose *different* rails."""
+    return [
+        Failure(FailureType.NIC_HARDWARE, node_a, rail_a),
+        Failure(FailureType.NIC_HARDWARE, node_b, rail_b),
+    ]

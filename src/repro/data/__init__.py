@@ -1,0 +1,1 @@
+from .synthetic import SyntheticConfig, SyntheticTokens, make_batch  # noqa: F401

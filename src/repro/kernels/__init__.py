@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention — online-softmax attention, full mask menu (causal /
+                    sliding-window / prefix-LM / logit softcap)
+  chunk_combine   — fused R2CCL stage-2 merge (the paper's custom
+                    broadcast-kernel analogue)
+  lru_scan        — RG-LRU linear recurrence (RecurrentGemma)
+  wkv_scan        — RWKV-6 WKV matrix-state recurrence
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling, an ``ops.py``
+jit wrapper (padding/dispatch), and a pure-jnp oracle in ``ref.py``.
+Validated with interpret=True on CPU; lowers to Mosaic on real TPU.
+"""
+
+from . import ops, ref  # noqa: F401

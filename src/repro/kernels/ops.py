@@ -1,0 +1,119 @@
+"""Jit'd public wrappers for the Pallas kernels (padding, dtype, dispatch).
+
+``impl`` selection:
+  * "pallas"     — pl.pallas_call, TPU lowering (interpret=False);
+  * "interpret"  — same kernel body executed in interpret mode (CPU CI);
+  * "reference"  — the pure-jnp oracle from ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chunk_combine import chunk_combine_pallas
+from .flash_attention import flash_attention_pallas
+from .lru_scan import lru_scan_pallas
+
+
+def _pad_axis(x, axis, multiple):
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "prefix_len", "logit_cap", "scale",
+    "q_block", "kv_block", "impl"))
+def flash_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int | None = None,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    impl: str = "interpret",
+):
+    """(B,Tq,KVH,G,D) x (B,Tk,KVH,D)^2 -> (B,Tq,KVH,G,D)."""
+    if impl == "reference":
+        return ref.reference_attention(
+            q, k, v, causal=causal, window=window, prefix_len=prefix_len,
+            logit_cap=logit_cap, scale=scale)
+    Tq, Tk = q.shape[1], k.shape[1]
+    qb = min(q_block, Tq) if Tq >= 8 else Tq
+    kb = min(kv_block, Tk) if Tk >= 8 else Tk
+    qp, tq = _pad_axis(q, 1, qb)
+    kp, _ = _pad_axis(k, 1, kb)
+    vp, _ = _pad_axis(v, 1, kb)
+    out = flash_attention_pallas(
+        qp, kp, vp, causal=causal, window=window, prefix_len=prefix_len,
+        logit_cap=logit_cap, scale=scale, q_block=qb, kv_block=kb,
+        interpret=(impl != "pallas"))
+    return out[:, :tq]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "impl"))
+def chunk_combine(local, recv, seg_mask, accumulate, *, tile: int = 512,
+                  impl: str = "interpret"):
+    """Fused R2CCL stage-2 merge; (C,M) buffers, (C,) masks."""
+    if impl == "reference":
+        return ref.reference_chunk_combine(local, recv, seg_mask, accumulate)
+    lp, m = _pad_axis(local, 1, tile)
+    rp, _ = _pad_axis(recv, 1, tile)
+    out = chunk_combine_pallas(lp, rp, seg_mask, accumulate, tile=min(tile, lp.shape[1]),
+                               interpret=(impl != "pallas"))
+    return out[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("time_tile", "width_tile",
+                                             "batch_tile", "impl"))
+def lru_scan(a, x, *, time_tile: int = 128, width_tile: int = 128,
+             batch_tile: int = 8, impl: str = "interpret"):
+    """RG-LRU hidden states with h0=0; (B,T,W) -> (B,T,W) float32."""
+    if impl == "reference":
+        h0 = jnp.zeros((a.shape[0], a.shape[2]), jnp.float32)
+        return ref.reference_lru_scan(a, x, h0)
+    B, T, W = a.shape
+    tt = min(time_tile, T)
+    wt = min(width_tile, W)
+    bt = min(batch_tile, B)
+    ap, t0 = _pad_axis(a, 1, tt)
+    xp, _ = _pad_axis(x, 1, tt)
+    ap, w0 = _pad_axis(ap, 2, wt)
+    xp, _ = _pad_axis(xp, 2, wt)
+    ap, b0 = _pad_axis(ap, 0, bt)
+    xp, _ = _pad_axis(xp, 0, bt)
+    # padded decay must be *1* with x=0 so the scan carry passes through
+    if ap.shape != a.shape:
+        mask_t = jnp.arange(ap.shape[1]) < t0
+        ap = jnp.where(mask_t[None, :, None], ap, 1.0)
+    out = lru_scan_pallas(ap, xp, time_tile=tt, width_tile=wt, batch_tile=bt,
+                          interpret=(impl != "pallas"))
+    return out[:b0, :t0, :w0]
+
+
+@functools.partial(jax.jit, static_argnames=("time_tile", "impl"))
+def wkv_scan(r, k, v, w, u, *, time_tile: int = 64, impl: str = "interpret"):
+    """RWKV-6 WKV recurrence: r/k/w (BH,T,K), v (BH,T,V), u (BH,K)
+    -> (BH,T,V) float32, S_0 = 0."""
+    from .wkv_scan import wkv_scan_pallas
+    if impl == "reference":
+        return ref.reference_wkv(r, k, v, w, u)
+    T = r.shape[1]
+    tt = min(time_tile, T)
+    rp, t0 = _pad_axis(r, 1, tt)
+    kp, _ = _pad_axis(k, 1, tt)
+    vp, _ = _pad_axis(v, 1, tt)
+    wp, _ = _pad_axis(w, 1, tt)
+    out = wkv_scan_pallas(rp, kp, vp, wp, u, time_tile=tt,
+                          interpret=(impl != "pallas"))
+    return out[:, :t0]

@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(
+    q: jax.Array,                    # (B, Tq, KVH, G, D)
+    k: jax.Array,                    # (B, Tk, KVH, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len: int | None = None,
+    logit_cap: float | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """Naive full-matrix softmax attention — the semantic ground truth."""
+    B, Tq, KVH, G, D = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if logit_cap is not None:
+        s = jnp.tanh(s / logit_cap) * logit_cap
+    qp = jnp.arange(Tq)[:, None]
+    kp = jnp.arange(Tk)[None, :]
+    mask = jnp.ones((Tq, Tk), bool)
+    if causal:
+        c = kp <= qp
+        if prefix_len is not None:
+            c = c | (kp < prefix_len)
+        mask = mask & c
+    if window is not None:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def reference_chunk_combine(local: jax.Array, recv: jax.Array,
+                            seg_mask: jax.Array, accumulate: jax.Array) -> jax.Array:
+    """Oracle for the R2CCL stage-2 combine: per-chunk select/accumulate.
+
+    local/recv: (C, M); seg_mask, accumulate: (C,) bool.
+    out[c] = local[c]                 if not seg_mask[c]
+           = local[c] + recv[c]       if seg_mask[c] and accumulate[c]
+           = recv[c]                  if seg_mask[c] and not accumulate[c]
+    """
+    lf = local.astype(jnp.float32)
+    rf = recv.astype(jnp.float32)
+    comb = jnp.where(accumulate[:, None], lf + rf, rf)
+    return jnp.where(seg_mask[:, None], comb, lf).astype(local.dtype)
+
+
+def reference_lru_scan(a: jax.Array, x: jax.Array, h0: jax.Array) -> jax.Array:
+    """Sequential oracle for the RG-LRU scan: h_t = a_t h_{t-1} + x_t.
+
+    a, x: (B, T, W); h0: (B, W).  Returns (B, T, W) in float32.
+    """
+    af = a.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (af.transpose(1, 0, 2), xf.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def reference_wkv(r, k, v, w, u):
+    """Oracle for the WKV kernel: r/k/w (BH,T,K), v (BH,T,V), u (BH,K)
+    -> (BH,T,V); S_0 = 0.  Sequential scan per (batch*head) row."""
+    BH, T, K = r.shape
+    rf, kf, vf, wf, uf = (x.astype(jnp.float32) for x in (r, k, v, w, u))
+
+    def one(rb, kb, vb, wb, ub):
+        def step(s, inp):
+            rt, kt, vt, wt = inp
+            kv = kt[:, None] * vt[None, :]
+            ot = rt @ (s + ub[:, None] * kv)
+            return wt[:, None] * s + kv, ot
+        s0 = jnp.zeros((K, vb.shape[1]), jnp.float32)
+        _, out = jax.lax.scan(step, s0, (rb, kb, vb, wb))
+        return out
+
+    return jax.vmap(one)(rf, kf, vf, wf, uf)

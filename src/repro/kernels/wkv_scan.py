@@ -1,0 +1,88 @@
+"""RWKV-6 WKV recurrence Pallas kernel (TPU target).
+
+State S in R^{K x V} per (batch, head), data-dependent per-channel decay:
+
+    out_t = r_t @ (S_{t-1} + u * k_t^T v_t)
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+Grid: (batch*heads, num_time_tiles) with the time dimension sequential and
+the (K, V) state tile carried in VMEM scratch.  Within a tile the
+recurrence is stepped with a fori_loop of rank-1 updates — outer products
+and row-scales are VPU work; K=V=64 tiles match the lane layout.
+
+The jnp oracle is ``repro.models.rwkv6.wkv_scan_ref`` (re-exported in
+``ref.reference_wkv``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr,
+                *, time_tile: int):
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (tt, K)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (tt, V)
+    w = w_ref[0].astype(jnp.float32)          # (tt, K)
+    u = u_ref[0].astype(jnp.float32)          # (K,)
+
+    def step(t, carry):
+        s, out = carry
+        kt = k[t][:, None]                     # (K, 1)
+        vt = v[t][None, :]                     # (1, V)
+        kv = kt * vt                           # (K, V) rank-1
+        ot = (r[t][None, :] @ (s + u[:, None] * kv))[0]      # (V,)
+        s = w[t][:, None] * s + kv
+        out = lax.dynamic_update_index_in_dim(out, ot, t, 0)
+        return s, out
+
+    s0 = s_scr[...]
+    out0 = jnp.zeros((time_tile, v.shape[1]), jnp.float32)
+    sT, out = lax.fori_loop(0, time_tile, step, (s0, out0))
+    o_ref[0] = out.astype(o_ref.dtype)
+    s_scr[...] = sT
+
+
+def wkv_scan_pallas(
+    r: jax.Array,                  # (BH, T, K)
+    k: jax.Array,
+    v: jax.Array,                  # (BH, T, V)
+    w: jax.Array,                  # (BH, T, K) decay in (0,1)
+    u: jax.Array,                  # (BH, K) bonus
+    *,
+    time_tile: int = 64,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns (BH, T, V) float32; S_0 = 0 (prefill semantics)."""
+    BH, T, K = r.shape
+    V = v.shape[2]
+    assert T % time_tile == 0
+    grid = (BH, T // time_tile)
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, time_tile=time_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, time_tile, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, time_tile, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, time_tile, V), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, time_tile, K), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, K), lambda b, t: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, time_tile, V), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, T, V), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)

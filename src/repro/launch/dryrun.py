@@ -1,0 +1,427 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+Proves the distribution config is coherent without hardware: for each
+assigned architecture and input shape, ``train_step`` / ``serve_step`` is
+jit-lowered with production shardings on the 16x16 single-pod mesh and the
+2x16x16 multi-pod mesh, compiled, and the compiled artifact's
+memory/cost/collective analysis is written to ``experiments/dryrun/``.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma2-27b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod-only|--single-only]
+  python -m repro.launch.dryrun --arch X --shape Y --sync r2ccl
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.core.planner import CommConfig
+from repro.launch import sharding as SH
+from repro.launch.hlo_analysis import (
+    HBM_PER_CHIP,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.launch.mesh import data_axis_names, make_production_mesh, rules_for
+from repro.models import apply_model, get_config, init_caches, init_model
+from repro.models.registry import list_architectures
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+from repro.training.train_step import TrainState
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# skip rules (recorded in DESIGN.md)
+# ---------------------------------------------------------------------------
+
+def skip_reason(cfg: ModelConfig, shape: InputShape) -> str | None:
+    if cfg.encoder_only and shape.mode == "decode":
+        return "encoder-only architecture has no decode step"
+    return None
+
+
+def long_context_window(cfg: ModelConfig, shape: InputShape) -> int | None:
+    """Sliding-window substitution for dense archs at 500k (sub-quadratic
+    requirement); native-state archs (ssm/hybrid/MLA) need no override."""
+    if shape.name != "long_500k":
+        return None
+    if cfg.family in ("ssm", "hybrid"):
+        return None                      # recurrent state / local attn native
+    if cfg.attention is not None and cfg.attention.kind == "mla":
+        return None                      # latent cache is linear in context
+    return cfg.long_context_window
+
+
+def cache_context_len(cfg: ModelConfig, shape: InputShape) -> int:
+    w = long_context_window(cfg, shape)
+    if w is not None:
+        return w
+    if cfg.attention is not None and cfg.attention.kind == "mla":
+        return shape.seq_len
+    if cfg.family in ("ssm",):
+        return 1                         # state caches ignore this
+    return shape.seq_len
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins, no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict[str, jax.ShapeDtypeStruct]:
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    if cfg.modality.kind == "audio_frames":
+        batch = {
+            "frames": jax.ShapeDtypeStruct((B, T, cfg.modality.frontend_dim), f32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+            "loss_mask": jax.ShapeDtypeStruct((B, T), f32),
+        }
+    elif cfg.modality.kind == "vision_text":
+        Ppre = cfg.modality.num_prefix_tokens
+        tlen = max(T - Ppre, 1)
+        batch = {
+            "patches": jax.ShapeDtypeStruct((B, Ppre, cfg.modality.frontend_dim), f32),
+            "tokens": jax.ShapeDtypeStruct((B, tlen), i32),
+            "labels": jax.ShapeDtypeStruct((B, tlen), i32),
+        }
+    else:
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+    if shape.mode == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if shape.mode == "prefill":
+        batch.pop("labels", None)
+        batch.pop("loss_mask", None)
+    return batch
+
+
+def abstract_state(cfg: ModelConfig):
+    def init():
+        params, _ = init_model(jax.random.PRNGKey(0), cfg)
+        return init_train_state(params)
+    return jax.eval_shape(init)
+
+
+def abstract_caches(cfg: ModelConfig, shape: InputShape):
+    ctx = cache_context_len(cfg, shape)
+    w = long_context_window(cfg, shape)
+    return jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, ctx, window_override=w))
+
+
+# ---------------------------------------------------------------------------
+# one dry-run
+# ---------------------------------------------------------------------------
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               sync: str = "xla", comm: CommConfig | None = None,
+               sharding_mode: str = "auto", verbose: bool = True,
+               correct_scan: bool = True,
+               cfg_override: ModelConfig | None = None) -> dict[str, Any]:
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    reason = skip_reason(cfg, shape)
+    result: dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "sync": sync if shape.mode == "train" else "n/a",
+    }
+    if reason:
+        result["skipped"] = reason
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    rules = rules_for(cfg, sharding_mode)
+    baxes = data_axis_names(mesh)
+
+    t0 = time.time()
+    params_shape, axes = _eval_init(cfg)
+    state_shape = jax.eval_shape(lambda: init_train_state(params_shape))
+    pspecs = SH.param_pspecs(mesh, rules, axes, params_shape)
+    state_specs = TrainState(
+        params=pspecs,
+        opt_state={"mu": pspecs, "nu": pspecs, "count": P()},
+        step=P(),
+    )
+    batch = input_specs(cfg, shape)
+    bspecs = SH.batch_pspecs(mesh, batch, baxes)
+
+    if shape.mode == "train":
+        step_fn = make_train_step(
+            cfg, AdamWConfig(), sync=sync, comm=comm, mesh=mesh,
+            data_axes=baxes)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(SH.named(mesh, state_specs), SH.named(mesh, bspecs)),
+            out_shardings=(SH.named(mesh, state_specs), None),
+        )
+        args = (state_shape, batch)
+        tokens = shape.global_batch * shape.seq_len
+        mode = "train"
+    else:
+        caches = abstract_caches(cfg, shape)
+        cspecs = SH.cache_pspecs(mesh, caches, baxes)
+        w = long_context_window(cfg, shape)
+
+        if shape.mode == "prefill":
+            def serve_step(params, batch, caches):
+                logits, caches, _ = apply_model(params, cfg, batch,
+                                                mode="prefill", caches=caches,
+                                                window_override=w)
+                return jnp.argmax(logits[:, -1], -1), caches
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(SH.named(mesh, pspecs), SH.named(mesh, bspecs),
+                              SH.named(mesh, cspecs)),
+                out_shardings=(None, SH.named(mesh, cspecs)),
+            )
+            args = (params_shape, batch, caches)
+            tokens = shape.global_batch * shape.seq_len
+            mode = "prefill"
+        else:
+            def serve_step(params, tokens_in, caches):
+                logits, caches, _ = apply_model(params, cfg,
+                                                {"tokens": tokens_in},
+                                                mode="decode", caches=caches,
+                                                window_override=w)
+                return jnp.argmax(logits[:, -1], -1), caches
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(SH.named(mesh, pspecs),
+                              SH.named(mesh, bspecs["tokens"]),
+                              SH.named(mesh, cspecs)),
+                out_shardings=(None, SH.named(mesh, cspecs)),
+            )
+            args = (params_shape, batch["tokens"], caches)
+            tokens = shape.global_batch          # one token per sequence
+            mode = "decode"
+
+    with jax.set_mesh(mesh):          # with_sharding_constraint(P) support
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    wire_dev = coll.wire_bytes
+    coll_op_bytes = dict(coll.op_bytes)
+
+    # --- scan-trip-count correction -------------------------------------
+    # XLA's cost_analysis counts a while-loop (lax.scan) body ONCE, not
+    # x trip_count.  We recover the per-group body cost from two reduced
+    # compiles (1 group and 2 groups of the layer pattern) and extrapolate:
+    #   cost(G groups) = cost_raw + (G - 1) * (cost_2g - cost_1g).
+    from repro.models.transformer import _pattern_split
+    import dataclasses as _dc
+    n_groups, pattern, _rem = _pattern_split(cfg)
+    scan_corrected = False
+    if correct_scan and n_groups > 1:
+        lead = cfg.moe.first_k_dense if (cfg.moe and cfg.moe.first_k_dense) else 0
+        plen = len(pattern)
+        sub = {}
+        for gname, groups in (("g1", 1), ("g2", 2)):
+            # unrolled (scan_layers=False) so cost_analysis sees each group
+            sub_cfg = _dc.replace(cfg, num_layers=lead + groups * plen,
+                                  scan_layers=False,
+                                  name=f"{cfg.name}-{gname}")
+            sub[gname] = dryrun_one(
+                arch, shape_name, multi_pod=multi_pod, sync=sync, comm=comm,
+                sharding_mode=sharding_mode, verbose=False,
+                correct_scan=False, cfg_override=sub_cfg)
+        def _body(metric):
+            return max(sub["g2"][metric] - sub["g1"][metric], 0.0)
+        flops_dev += (n_groups - 1) * _body("flops_per_device")
+        bytes_dev += (n_groups - 1) * _body("hbm_bytes_per_device")
+        wire_dev += (n_groups - 1) * _body("wire_bytes_per_device")
+        for k in coll_op_bytes:
+            delta = max(sub["g2"]["collective_op_bytes"].get(k, 0.0)
+                        - sub["g1"]["collective_op_bytes"].get(k, 0.0), 0.0)
+            coll_op_bytes[k] += (n_groups - 1) * delta
+        scan_corrected = True
+    terms = roofline_terms(
+        flops_per_device=flops_dev,
+        hbm_bytes_per_device=bytes_dev,
+        wire_bytes_per_device=wire_dev,
+        chips=chips,
+    )
+    mflops = model_flops(cfg, tokens, "train" if mode == "train" else "infer")
+
+    result.update({
+        "chips": chips,
+        "mode": mode,
+        "scan_corrected": scan_corrected,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": flops_dev,
+        "hbm_bytes_per_device": bytes_dev,
+        "collective_op_bytes": coll_op_bytes,
+        "collective_op_counts": coll.op_counts,
+        "wire_bytes_per_device": wire_dev,
+        "roofline": terms,
+        "model_flops_global": mflops,
+        "useful_flops_ratio": (mflops / (flops_dev * chips)) if flops_dev else None,
+        "memory_analysis": _mem_dict(mem),
+        "fits_hbm": (_mem_dict(mem).get("total_bytes", 0) <= HBM_PER_CHIP
+                     if mem else None),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    })
+    if verbose:
+        r = terms
+        print(f"[{arch} x {shape_name} x {result['mesh']}] mode={mode} "
+              f"compile={t_compile:.0f}s compute={r['compute_s']*1e3:.2f}ms "
+              f"mem={r['memory_s']*1e3:.2f}ms coll={r['collective_s']*1e3:.2f}ms "
+              f"-> {r['bottleneck']}")
+    return result
+
+
+_EVAL_CACHE: dict[str, Any] = {}
+
+
+def _eval_init(cfg):
+    """(params ShapeDtypeStructs, logical-axes pytree) without allocation."""
+    if cfg.name in _EVAL_CACHE:
+        return _EVAL_CACHE[cfg.name]
+    holder = {}
+
+    def capture():
+        params, axes = init_model(jax.random.PRNGKey(0), cfg)
+        holder["axes"] = axes            # static strings, safe to capture
+        return params
+
+    params_shape = jax.eval_shape(capture)
+    _EVAL_CACHE[cfg.name] = (params_shape, holder["axes"])
+    return _EVAL_CACHE[cfg.name]
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    args = out.get("argument_size_in_bytes", 0)
+    out["total_bytes"] = (args + out.get("temp_size_in_bytes", 0)
+                          + out.get("output_size_in_bytes", 0)
+                          - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--sync", default="xla", choices=["xla", "r2ccl"])
+    ap.add_argument("--comm-mode", default="ring",
+                    choices=["xla", "ring", "r2ccl", "recursive"])
+    ap.add_argument("--degraded-rank", type=int, default=None)
+    ap.add_argument("--lost-fraction", type=float, default=0.0)
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default=None,
+                    help="perf-iteration config variant, e.g. "
+                         "'expert_axis=model' or 'sharding=fsdp_tp' or "
+                         "'remat=false' (comma-separated)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    archs = [a for a in list_architectures() if a != "paper-7b"] \
+        if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multipod]
+
+    comm = None
+    if args.sync == "r2ccl":
+        comm = CommConfig(mode=args.comm_mode, degraded_rank=args.degraded_rank,
+                          lost_fraction=args.lost_fraction)
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'mp' if mp else 'sp'}__{args.sync}"
+                sharding_mode = "auto"
+                cfg_override = None
+                if args.variant:
+                    import dataclasses as _dc
+                    cfg_override = get_config(arch)
+                    for kv in args.variant.split(","):
+                        k, v = kv.split("=")
+                        if k == "expert_axis" and cfg_override.moe:
+                            cfg_override = _dc.replace(
+                                cfg_override,
+                                moe=_dc.replace(cfg_override.moe, expert_axis=v))
+                        elif k == "sharding":
+                            sharding_mode = v
+                        elif k == "remat":
+                            cfg_override = _dc.replace(
+                                cfg_override, remat=v.lower() == "true")
+                        else:
+                            raise SystemExit(f"unknown variant key {k}")
+                    tag += "__" + args.variant.replace("=", "-").replace(",", "_")
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                try:
+                    res = dryrun_one(arch, shape, multi_pod=mp,
+                                     sync=args.sync, comm=comm,
+                                     sharding_mode=sharding_mode,
+                                     cfg_override=cfg_override)
+                    res["variant"] = args.variant
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures.append(tag)
+                    print(f"[FAIL] {tag}: {e}")
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES: {failures}")
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Compiled-HLO analysis: collective bytes, roofline terms.
+
+``cost_analysis()`` gives FLOPs and HBM bytes but not collective traffic;
+we parse the (SPMD-partitioned, per-device) HLO text and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, recording replica-group sizes so wire-byte factors
+(e.g. 2(n-1)/n for ring AllReduce) can be applied.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+# v5e hardware constants (per task spec)
+PEAK_FLOPS = 197e12            # bf16 FLOP/s per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link
+HBM_PER_CHIP = 16e9            # v5e HBM capacity
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: dict[str, float]            # per-device operand bytes by op kind
+    op_counts: dict[str, int]
+    wire_bytes: float                     # per-device bytes on the wire (ring factors)
+    group_sizes: dict[str, list[int]]
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    op_bytes: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    op_counts: dict[str, int] = {c: 0 for c in COLLECTIVES}
+    group_sizes: dict[str, list[int]] = {c: [] for c in COLLECTIVES}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(r"=\s+(?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+([a-z0-9-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-done"):
+            continue                    # async pair: count the -start only
+        base = None
+        for c in COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # operand shapes: everything inside the call parens
+        paren = line.find("(")
+        operands = line[paren + 1:line.rfind(")")] if paren > 0 else ""
+        obytes = sum(_shape_bytes(d, dims)
+                     for d, dims in _SHAPE_RE.findall(operands))
+        if obytes == 0:
+            # fall back to the output shape left of '='
+            lhs = line.split("=", 1)[1]
+            shapes = _SHAPE_RE.findall(lhs.split("(", 1)[0])
+            obytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gsize = len([t for t in gm.group(1).split(",") if t.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            gsize = int(gi.group(2)) if gi else 2
+        gsize = max(gsize, 1)
+        op_bytes[base] += obytes
+        op_counts[base] += 1
+        group_sizes[base].append(gsize)
+        if base == "all-reduce":
+            wire += obytes * 2 * (gsize - 1) / gsize
+        elif base in ("all-gather", "reduce-scatter"):
+            wire += obytes * (gsize - 1) / gsize if base == "reduce-scatter" \
+                else obytes * (gsize - 1)   # AG operand is the shard
+        elif base == "all-to-all":
+            wire += obytes * (gsize - 1) / gsize
+        else:                               # collective-permute
+            wire += obytes
+    return CollectiveStats(op_bytes, op_counts, wire, group_sizes)
+
+
+def roofline_terms(
+    *,
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    wire_bytes_per_device: float,
+    chips: int,
+) -> dict[str, float]:
+    """The three roofline terms, in seconds (global work / global capacity
+    == per-device work / per-device capacity)."""
+    compute = flops_per_device / PEAK_FLOPS
+    memory = hbm_bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / ICI_BW
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])
+    return {
+        "compute_s": compute,
+        "memory_s": memory,
+        "collective_s": collective,
+        "bottleneck": dominant[0],
+        "bound_s": dominant[1],
+    }
+
+
+def model_flops(cfg, tokens: float, mode: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference."""
+    n = cfg.active_param_count()
+    per_tok = 6.0 * n if mode == "train" else 2.0 * n
+    return per_tok * tokens

@@ -1,0 +1,49 @@
+"""Production mesh construction + logical-axis sharding rules.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single pod: 16x16 = 256 chips ("data", "model");
+multi-pod: 2x16x16 = 512 chips ("pod", "data", "model").
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import FSDP_TP_RULES, ShardingConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(n // data, 1))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def data_axis_names(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def rules_for(cfg, mode: str = "auto") -> dict:
+    """Logical-axis -> mesh-axis rules; big models get FSDP+TP.
+
+    ``ep2d`` variant: shard the expert dim over (model, data) — viable when
+    num_experts divides the whole mesh (deepseek-v3: 256 = 16x16), which
+    makes expert gradients fully sharded (no data-axis all-reduce for the
+    654B expert params).  Archs whose expert count doesn't divide fall back
+    to model-only sharding automatically (divisibility rule).
+    """
+    if mode in ("fsdp_tp", "ep2d") or (mode == "auto" and cfg.param_count() > 30e9):
+        rules = dict(FSDP_TP_RULES)
+        if mode == "ep2d":
+            rules["experts"] = ("model", "pod", "data")
+        return rules
+    return ShardingConfig().lookup()

@@ -1,0 +1,135 @@
+"""Roofline report generator: reads experiments/dryrun/*.json and emits the
+EXPERIMENTS.md tables (single-pod baselines for every arch x shape, the
+multi-pod lowering matrix, and per-pair bottleneck analysis).
+
+  PYTHONPATH=src python -m repro.launch.roofline [--dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.launch.hlo_analysis import HBM_PER_CHIP
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str) -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(v: float) -> str:
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v*1e3:.1f}ms"
+    return f"{v*1e6:.0f}us"
+
+
+def fmt_b(v: float) -> str:
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if v >= div:
+            return f"{v/div:.1f}{unit}"
+    return f"{v:.0f}B"
+
+
+def baseline_table(results: list[dict]) -> str:
+    rows = [r for r in results if r["mesh"] == "16x16" and r.get("sync") in ("xla", "n/a")]
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"])))
+    lines = [
+        "| arch | shape | mode | compute | memory | collective | bottleneck "
+        "| useful FLOPs | bytes/chip | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                         f"SKIP ({r['skipped'][:38]}) | — | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        per_chip = mem.get("total_bytes", 0)
+        fits = "yes" if per_chip and per_chip <= HBM_PER_CHIP else \
+            (f"no ({fmt_b(per_chip)})" if per_chip else "n/a")
+        useful = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mode']} "
+            f"| {fmt_s(t['compute_s'])} | {fmt_s(t['memory_s'])} "
+            f"| {fmt_s(t['collective_s'])} | **{t['bottleneck']}** "
+            f"| {useful:.2f} | {fmt_b(per_chip)} | {fits} |"
+            if useful is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mode']} | — | — | — | — | — | — | — |")
+    return "\n".join(lines)
+
+
+def multipod_matrix(results: list[dict]) -> str:
+    lines = ["| arch | " + " | ".join(SHAPE_ORDER) + " |",
+             "|---|" + "---|" * len(SHAPE_ORDER)]
+    by = {}
+    for r in results:
+        if r["mesh"] == "2x16x16":
+            by[(r["arch"], r["shape"])] = r
+    archs = sorted({r["arch"] for r in results})
+    for a in archs:
+        cells = []
+        for s in SHAPE_ORDER:
+            r = by.get((a, s))
+            if r is None:
+                cells.append("—")
+            elif "error" in r:
+                cells.append("FAIL")
+            elif "skipped" in r:
+                cells.append("skip")
+            else:
+                cells.append(f"ok ({r['compile_s']:.0f}s)")
+        lines.append(f"| {a} | " + " | ".join(cells) + " |")
+    return "\n".join(lines)
+
+
+def bottleneck_notes(results: list[dict]) -> str:
+    """One sentence per (arch, shape): what moves the dominant term down."""
+    suggestions = {
+        ("collective", "train"): "shard params over data (ZeRO) or bucket+overlap the gradient ring with backward compute",
+        ("collective", "prefill"): "reduce TP all-gathers by sequence-sharding activations (ring attention) or 2D sharding the MLP",
+        ("collective", "decode"): "keep KV cache fully resident per model shard; swap all-gather for one-hot gather",
+        ("memory", "train"): "increase arithmetic intensity: larger per-chip batch, fuse norm/rope, drop remat on cheap layers",
+        ("memory", "prefill"): "larger attention blocks (more reuse per HBM read), bf16 cache writes",
+        ("memory", "decode"): "decode is inherently weight-streaming-bound; batch more sequences per chip or quantize weights",
+        ("compute", "train"): "already compute-bound — good; push MXU utilization via 128-multiple tiles",
+        ("compute", "prefill"): "already compute-bound — good",
+        ("compute", "decode"): "unusual; check for redundant recompute",
+    }
+    lines = []
+    for r in results:
+        if r["mesh"] != "16x16" or "skipped" in r or "error" in r:
+            continue
+        t = r["roofline"]
+        key = (t["bottleneck"], r["mode"])
+        lines.append(f"- **{r['arch']} x {r['shape']}** -> {t['bottleneck']}-bound "
+                     f"({fmt_s(t['bound_s'])}); {suggestions.get(key, '')}")
+    return "\n".join(sorted(lines))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun"))
+    args = ap.parse_args()
+    results = load(args.dir)
+    print("## Single-pod (16x16 = 256 chips) baseline roofline\n")
+    print(baseline_table(results))
+    print("\n## Multi-pod (2x16x16 = 512 chips) lowering matrix\n")
+    print(multipod_matrix(results))
+    print("\n## Per-pair bottleneck notes\n")
+    print(bottleneck_notes(results))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,172 @@
+"""Sharding spec construction: logical axes -> PartitionSpecs.
+
+Params carry logical-axis tuples from the model init (``axes`` pytree);
+``param_pspecs`` maps them onto the mesh with divisibility fallbacks
+(a logical axis whose mesh extent doesn't divide the dimension is
+replicated — the MaxText rule).  Caches get structural specs by dataclass
+field name: batch -> data axes, kv-heads -> model (else the sequence dim
+takes "model" so 32k/500k caches fit per-device HBM).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.layers import KVCache
+from repro.models.mla import MLACache
+from repro.models.rglru import RGLRUState
+from repro.models.rwkv6 import RWKVState
+
+
+def _mesh_extent(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    ext = 1
+    for a in axes:
+        ext *= mesh.shape[a]
+    return ext
+
+
+def _spec_entry(mesh, rules, logical, dim_size):
+    mesh_axes = rules.get(logical)
+    if mesh_axes is None:
+        return None
+    if isinstance(mesh_axes, str):
+        mesh_axes = (mesh_axes,)
+    mesh_axes = tuple(a for a in mesh_axes if a in mesh.axis_names)
+    if not mesh_axes:
+        return None
+    if dim_size % _mesh_extent(mesh, mesh_axes) != 0:
+        return None                       # divisibility fallback: replicate
+    return mesh_axes if len(mesh_axes) > 1 else mesh_axes[0]
+
+
+def param_pspec(mesh, rules, logical_axes: tuple, shape) -> P:
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set[str] = set()
+    entries = []
+    for ax, dim in zip(logical_axes, shape):
+        e = _spec_entry(mesh, rules, ax, dim) if ax is not None else None
+        # one mesh axis may shard only one dim of a given array
+        flat = (e,) if isinstance(e, str) else (e or ())
+        if e is not None and any(a in used for a in flat):
+            e = None
+        if e is not None:
+            used.update(flat)
+        entries.append(e)
+    return P(*entries)
+
+
+def param_pspecs(mesh, rules, axes_tree, params_tree):
+    """PartitionSpec pytree for params given their logical-axes pytree."""
+    def is_axes_leaf(x):
+        return isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x)
+
+    flat_axes = jax.tree_util.tree_flatten(axes_tree, is_leaf=is_axes_leaf)
+    flat_params, treedef = jax.tree_util.tree_flatten(params_tree)
+    axes_leaves = flat_axes[0]
+    assert len(axes_leaves) == len(flat_params), (
+        f"axes/params mismatch: {len(axes_leaves)} vs {len(flat_params)}")
+    specs = [param_pspec(mesh, rules, ax, p.shape)
+             for ax, p in zip(axes_leaves, flat_params)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(mesh, field: str, shape, batch_axes, stacked: bool):
+    """Spec for one cache dataclass field.  ``stacked``: leading layer-group
+    dim from scanned blocks."""
+    lead = (None,) if stacked else ()
+    core = shape[1:] if stacked else shape
+    model_ok = lambda d: d % mesh.shape["model"] == 0
+    batch_ok = lambda d: d % _mesh_extent(mesh, batch_axes) == 0
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def bspec(d):
+        return ba if batch_ok(d) else None
+
+    if field in ("k", "v"):                    # (B, S, KVH, D)
+        b, s, kvh, d = core
+        if model_ok(kvh):
+            return P(*lead, bspec(b), None, "model", None)
+        if model_ok(s):
+            return P(*lead, bspec(b), "model", None, None)
+        return P(*lead, bspec(b), None, None, None)
+    if field == "positions":                   # (B, S)
+        b, s = core
+        # must match the k/v seq sharding only if seq is sharded; positions
+        # are tiny — replicate for simplicity and correctness.
+        return P(*lead, bspec(b), None)
+    if field in ("c_kv", "k_pe"):              # (B, S, R)
+        b, s, r = core
+        if model_ok(s):
+            return P(*lead, bspec(b), "model", None)
+        return P(*lead, bspec(b), None, None)
+    if field == "h":                           # (B, W)
+        b, w = core
+        return P(*lead, bspec(b), "model" if model_ok(w) else None)
+    if field == "conv_tail":                   # (B, cw-1, W)
+        b, c, w = core
+        return P(*lead, bspec(b), None, "model" if model_ok(w) else None)
+    if field == "s":                           # (B, H, K, V)
+        b, h, kk, vv = core
+        return P(*lead, bspec(b), "model" if model_ok(h) else None, None, None)
+    if field in ("shift_tm", "shift_cm"):      # (B, d)
+        b, d = core
+        return P(*lead, bspec(b), "model" if model_ok(d) else None)
+    if field == "index":
+        return P(*lead) if lead else P()
+    # fallback: batch on dim0 when divisible
+    if core and isinstance(core[0], int) and batch_ok(core[0]):
+        return P(*lead, ba, *([None] * (len(core) - 1)))
+    return P(*lead, *([None] * len(core)))
+
+
+def cache_pspecs(mesh, cache_tree, batch_axes: tuple[str, ...]):
+    """Spec pytree for an ``init_caches`` structure."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_tree), None
+    flat, treedef = jax.tree_util.tree_flatten(cache_tree)
+    paths = jax.tree_util.tree_flatten_with_path(cache_tree)[0]
+    specs = []
+    for (path, leaf) in paths:
+        field = None
+        for part in reversed(path):
+            name = getattr(part, "name", None) or getattr(part, "key", None)
+            if isinstance(name, str) and name in (
+                    "k", "v", "positions", "index", "c_kv", "k_pe", "h",
+                    "conv_tail", "s", "shift_tm", "shift_cm"):
+                field = name
+                break
+        # scanned block caches have a leading layer-group dim; detect via
+        # path containing the "blocks" key
+        stacked = any(getattr(p, "key", None) == "blocks" for p in path)
+        specs.append(_cache_leaf_spec(mesh, field or "", leaf.shape,
+                                      batch_axes, stacked))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(mesh, batch_tree, batch_axes: tuple[str, ...]):
+    ba = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % _mesh_extent(mesh, batch_axes) == 0:
+            return P(ba, *([None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree_util.tree_map(spec, batch_tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,460 @@
+"""Shared model layers: norms, RoPE, blockwise GQA attention, gated MLPs.
+
+Pure-JAX (no flax): parameters are nested dicts of ``jnp`` arrays; every
+``init_*`` returns ``(params, axes)`` where ``axes`` mirrors the params
+pytree with tuples of *logical* axis names used by the sharding rules in
+``launch/mesh.py``.
+
+The attention here is the **blockwise (online-softmax) reference**: it is
+the mathematical oracle for the Pallas flash kernel in
+``kernels/flash_attention.py`` and the implementation used on CPU and for
+dry-run lowering (Pallas custom-calls don't lower on the CPU backend).
+Memory stays O(block^2) regardless of sequence length, which is what lets
+the 32k/500k shapes compile with sane footprints.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Params = dict
+Axes = dict
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis_size, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}, {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * lax.rsqrt(var + eps) * (1.0 + params["scale"])
+    return y.astype(dtype)
+
+
+def init_layernorm(d: int):
+    return (
+        {"scale": jnp.zeros((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+        {"scale": ("embed",), "bias": ("embed",)},
+    )
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps) * (1.0 + params["scale"]) + params["bias"]
+    return y.astype(dtype)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return init_rmsnorm(d), rmsnorm
+    if kind == "layernorm":
+        return init_layernorm(d), layernorm
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., T, H, D); positions: broadcastable to (..., T)."""
+    freqs = rope_frequencies(x.shape[-1], theta)                 # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs    # (..., T, D/2)
+    angles = angles[..., None, :]                                # (..., T, 1, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# soft capping (gemma2)
+# ---------------------------------------------------------------------------
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+# ---------------------------------------------------------------------------
+# Blockwise attention (online softmax) — the flash-attention oracle
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _block_mask(q_pos, k_pos, *, causal: bool, window: int | None,
+                prefix_len, k_valid_len):
+    """(qb, kb) boolean mask from absolute positions."""
+    qp = q_pos[:, None]
+    kp = k_pos[None, :]
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), jnp.bool_)
+    if causal:
+        c = kp <= qp
+        if prefix_len is not None:
+            c = c | (kp < prefix_len)     # prefix-LM: bidirectional prefix
+        m = m & c
+    if window is not None:
+        m = m & (qp - kp < window)
+    if k_valid_len is not None:
+        m = m & (kp < k_valid_len)
+    return m
+
+
+def blockwise_attention(
+    q: jnp.ndarray,              # (B, Tq, KVH, G, D)  — grouped query heads
+    k: jnp.ndarray,              # (B, Tk, KVH, D)
+    v: jnp.ndarray,              # (B, Tk, KVH, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len=None,             # int | scalar array | None
+    logit_cap: float | None = None,
+    q_offset=0,                  # absolute position of q[0] (decode)
+    k_valid_len=None,            # valid prefix of k/v (cache fill level)
+    q_block: int = 512,
+    kv_block: int = 1024,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Memory-bounded attention with online softmax over KV blocks.
+
+    Returns (B, Tq, KVH, G, D).  All masking variants used by the model zoo
+    (causal, sliding-window, prefix-LM, cache-validity) are expressed in
+    ``_block_mask`` so the Pallas kernel and this oracle share semantics.
+    """
+    B, Tq, KVH, G, D = q.shape
+    Tk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    q_block = min(q_block, Tq)
+    kv_block = min(kv_block, Tk)
+    # pad to block multiples
+    pq = (-Tq) % q_block
+    pk = (-Tk) % kv_block
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_valid_len = Tk if k_valid_len is None else k_valid_len
+    nq, nk = q.shape[1] // q_block, k.shape[1] // kv_block
+
+    qf = (q * scale).astype(jnp.float32).reshape(B, nq, q_block, KVH, G, D)
+    kf = k.astype(jnp.float32).reshape(B, nk, kv_block, KVH, D)
+    vf = v.astype(jnp.float32).reshape(B, nk, kv_block, KVH, D)
+    q_offset = jnp.asarray(q_offset)
+
+    def q_step(_, qi):
+        qb = qf[:, qi]                                  # (B, qb, KVH, G, D)
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, ki):
+            m_prev, l_prev, acc = carry
+            kb = kf[:, ki]                              # (B, kb, KVH, D)
+            vb = vf[:, ki]
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb)  # (B,KVH,G,qb,kb)
+            s = softcap(s, logit_cap)
+            mask = _block_mask(q_pos, k_pos, causal=causal, window=window,
+                               prefix_len=prefix_len, k_valid_len=k_valid_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_cur = jnp.max(s, axis=-1)                  # (B,KVH,G,qb)
+            m_new = jnp.maximum(m_prev, m_cur)
+            # guard fully-masked rows
+            p = jnp.exp(s - m_new[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KVH, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KVH, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, KVH, G, q_block, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]     # (B,KVH,G,qb,D)
+        return None, out.transpose(0, 3, 1, 2, 4)        # (B,qb,KVH,G,D)
+
+    _, blocks = lax.scan(q_step, None, jnp.arange(nq))   # (nq,B,qb,KVH,G,D)
+    out = blocks.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * q_block, KVH, G, D)
+    return out[:, :Tq].astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,              # (B, 1, KVH, G, D)
+    k: jnp.ndarray,              # (B, S, KVH, D)   — cache
+    v: jnp.ndarray,
+    *,
+    q_position,                  # absolute position of the query token
+    window: int | None = None,
+    logit_cap: float | None = None,
+    k_positions=None,            # (S,) absolute positions (ring-buffer cache)
+    k_valid_len=None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Single-token attention over a (possibly ring-buffered) KV cache."""
+    B, _, KVH, G, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qf = (q[:, 0] * scale).astype(jnp.float32)           # (B,KVH,G,D)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, kf)            # (B,KVH,G,S)
+    s = softcap(s, logit_cap)
+    k_pos = k_positions if k_positions is not None else jnp.arange(S)
+    mask = (k_pos >= 0) & (k_pos <= q_position)   # -1 marks empty cache slots
+    if window is not None:
+        mask = mask & (q_position - k_pos < window)
+    if k_valid_len is not None:
+        mask = mask & (jnp.arange(S) < k_valid_len)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return out[:, None].astype(q.dtype)                  # (B,1,KVH,G,D)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (projections + cache handling)
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, d_model: int, num_heads: int, num_kv_heads: int, head_dim: int,
+             dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    params = {
+        "wq": dense_init(k1, (d_model, num_heads, head_dim), d_model, dtype),
+        "wk": dense_init(k2, (d_model, num_kv_heads, head_dim), d_model, dtype),
+        "wv": dense_init(k3, (d_model, num_kv_heads, head_dim), d_model, dtype),
+        "wo": dense_init(k4, (num_heads, head_dim, d_model),
+                         num_heads * head_dim, dtype),
+    }
+    axes = {
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+    }
+    return params, axes
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer KV cache; ``size`` may be a sliding window (ring buffer)."""
+
+    k: jnp.ndarray               # (B, S, KVH, D)
+    v: jnp.ndarray
+    positions: jnp.ndarray       # (B, S) absolute position of each slot (-1 empty)
+    index: jnp.ndarray           # scalar int32: next absolute position
+
+
+def init_kv_cache(batch: int, size: int, num_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, size, num_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, size, num_kv_heads, head_dim), dtype),
+        positions=jnp.full((batch, size), -1, jnp.int32),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+jax.tree_util.register_dataclass(
+    KVCache, data_fields=["k", "v", "positions", "index"], meta_fields=[]
+)
+
+
+def gqa_attention(
+    params: Params,
+    x: jnp.ndarray,              # (B, T, d)
+    *,
+    num_kv_heads: int,
+    num_heads: int,
+    head_dim: int,
+    rope_theta: float = 10_000.0,
+    use_rope: bool = True,
+    causal: bool = True,
+    window: int | None = None,
+    prefix_len=None,
+    logit_cap: float | None = None,
+    cache: KVCache | None = None,
+    mode: str = "train",         # train | prefill | decode
+    q_scale: float | None = None,
+) -> tuple[jnp.ndarray, KVCache | None]:
+    """GQA attention with optional sliding window / prefix-LM / KV cache."""
+    B, T, d = x.shape
+    G = num_heads // num_kv_heads
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"])     # (B,T,H,D)
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"])     # (B,T,KVH,D)
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"])
+
+    if mode == "decode":
+        assert cache is not None and T == 1
+        pos = cache.index
+        if use_rope:
+            q = apply_rope(q, jnp.full((B, 1), pos), rope_theta)
+            k = apply_rope(k, jnp.full((B, 1), pos), rope_theta)
+        S = cache.k.shape[1]
+        slot = pos % S                                   # ring buffer
+        ck = lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                      (0, slot, 0, 0))
+        cv = lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                      (0, slot, 0, 0))
+        cpos = lax.dynamic_update_slice(
+            cache.positions, jnp.full((B, 1), pos, jnp.int32), (0, slot))
+        qg = q.reshape(B, 1, num_kv_heads, G, head_dim)
+        out = decode_attention(
+            qg, ck, cv, q_position=pos, window=window, logit_cap=logit_cap,
+            k_positions=cpos[0], scale=q_scale,
+        )
+        out = out.reshape(B, 1, num_heads, head_dim)
+        y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+        return y, KVCache(ck, cv, cpos, pos + 1)
+
+    positions = jnp.arange(T)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    qg = q.reshape(B, T, num_kv_heads, G, head_dim)
+    out = blockwise_attention(
+        qg, k, v, causal=causal, window=window, prefix_len=prefix_len,
+        logit_cap=logit_cap, scale=q_scale,
+    )
+    out = out.reshape(B, T, num_heads, head_dim)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"])
+
+    new_cache = None
+    if mode == "prefill":
+        # Build the cache from the tail of the sequence (window caches keep
+        # only the last ``size`` positions).
+        size = cache.k.shape[1] if cache is not None else T
+        size = min(size, max(T, 1))
+        cache_dtype = cache.k.dtype if cache is not None else jnp.bfloat16
+        # Ring-buffer layout invariant: token p lives at slot p % size, so
+        # the tail must be rolled to align with decode's slot indexing.
+        shift = T % size
+        tail_k = jnp.roll(k[:, -size:], shift, axis=1).astype(cache_dtype)
+        tail_v = jnp.roll(v[:, -size:], shift, axis=1).astype(cache_dtype)
+        tail_pos = jnp.roll(
+            jnp.broadcast_to(positions[:, -size:], (B, size)), shift, axis=1
+        ).astype(jnp.int32)
+        if cache is not None and cache.k.shape[1] > size:
+            S = cache.k.shape[1]
+            ck = jnp.zeros_like(cache.k).at[:, :size].set(tail_k)
+            cv = jnp.zeros_like(cache.v).at[:, :size].set(tail_v)
+            cpos = jnp.full_like(cache.positions, -1).at[:, :size].set(tail_pos)
+            new_cache = KVCache(ck, cv, cpos, jnp.asarray(T, jnp.int32))
+        else:
+            new_cache = KVCache(tail_k, tail_v, tail_pos, jnp.asarray(T, jnp.int32))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if activation in ("swiglu", "geglu"):
+        params = {
+            "wg": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "wu": dense_init(k2, (d_model, d_ff), d_model, dtype),
+            "wd": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+        }
+        axes = {"wg": ("embed", "mlp"), "wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    else:
+        params = {
+            "wu": dense_init(k1, (d_model, d_ff), d_model, dtype),
+            "wd": dense_init(k3, (d_ff, d_model), d_ff, dtype),
+        }
+        axes = {"wu": ("embed", "mlp"), "wd": ("mlp", "embed")}
+    return params, axes
+
+
+def mlp(params: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    if activation == "swiglu":
+        h = jax.nn.silu(x @ params["wg"]) * (x @ params["wu"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(x @ params["wg"], approximate=True) * (x @ params["wu"])
+    elif activation == "gelu":
+        h = jax.nn.gelu(x @ params["wu"], approximate=True)
+    else:
+        raise ValueError(activation)
+    return h @ params["wd"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, tie: bool, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    params = {"embedding": embed_init(k1, (vocab, d_model), dtype)}
+    axes = {"embedding": ("vocab", "embed")}
+    if not tie:
+        params["unembed"] = dense_init(k2, (d_model, vocab), d_model, dtype)
+        axes["unembed"] = ("embed", "vocab")
+    return params, axes
+
+
+def embed(params, tokens, scale_by_dim: bool = False):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    if scale_by_dim:
+        x = x * math.sqrt(params["embedding"].shape[-1])
+    return x
+
+
+def unembed(params, x, logit_cap: float | None = None):
+    if "unembed" in params:
+        logits = x @ params["unembed"]
+    else:
+        logits = x @ params["embedding"].T
+    return softcap(logits.astype(jnp.float32), logit_cap)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None, z_loss: float = 0.0):
+    """Token-level CE with optional z-loss; logits (…, V), labels (…)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,160 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+KV activations are compressed into a low-rank latent ``c_kv`` (plus a
+shared RoPE key ``k_pe``); the KV cache stores only
+``kv_lora_rank + qk_rope_head_dim`` floats per token — the memory win that
+makes 128-head attention serveable.  Queries are likewise produced through
+a low-rank projection.
+
+Train/prefill path: decompress K/V per head and run blockwise attention.
+Decode path: the **absorbed** formulation — fold W_uk into the query and
+W_uv into the output so attention runs directly against the cached latents
+(never materializing per-head K/V for the full context).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import apply_rope, blockwise_attention, dense_init
+
+
+def init_mla(key, d_model: int, num_heads: int, *, q_lora_rank: int,
+             kv_lora_rank: int, qk_nope_head_dim: int, qk_rope_head_dim: int,
+             v_head_dim: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    qk_head_dim = qk_nope_head_dim + qk_rope_head_dim
+    params = {
+        # query path: d -> q_lora -> heads*(nope+rope)
+        "w_dq": dense_init(ks[0], (d_model, q_lora_rank), d_model, dtype),
+        "w_uq": dense_init(ks[1], (q_lora_rank, num_heads, qk_head_dim), q_lora_rank, dtype),
+        # kv path: d -> kv_lora (+ shared rope key)
+        "w_dkv": dense_init(ks[2], (d_model, kv_lora_rank), d_model, dtype),
+        "w_kpe": dense_init(ks[3], (d_model, qk_rope_head_dim), d_model, dtype),
+        "w_uk": dense_init(ks[4], (kv_lora_rank, num_heads, qk_nope_head_dim), kv_lora_rank, dtype),
+        "w_uv": dense_init(ks[5], (kv_lora_rank, num_heads, v_head_dim), kv_lora_rank, dtype),
+        "w_o": dense_init(ks[6], (num_heads, v_head_dim, d_model),
+                          num_heads * v_head_dim, dtype),
+    }
+    axes = {
+        "w_dq": ("embed", None),
+        "w_uq": (None, "heads", None),
+        "w_dkv": ("embed", None),
+        "w_kpe": ("embed", None),
+        "w_uk": (None, "heads", None),
+        "w_uv": (None, "heads", None),
+        "w_o": ("heads", None, "embed"),
+    }
+    return params, axes
+
+
+@dataclasses.dataclass
+class MLACache:
+    """Latent KV cache: (B, S, kv_lora_rank) + (B, S, rope_dim)."""
+
+    c_kv: jnp.ndarray
+    k_pe: jnp.ndarray
+    index: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    MLACache, data_fields=["c_kv", "k_pe", "index"], meta_fields=[]
+)
+
+
+def init_mla_cache(batch: int, size: int, kv_lora_rank: int,
+                   qk_rope_head_dim: int, dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, size, kv_lora_rank), dtype),
+        k_pe=jnp.zeros((batch, size, qk_rope_head_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_attention(
+    params,
+    x: jnp.ndarray,                    # (B, T, d)
+    *,
+    num_heads: int,
+    qk_nope_head_dim: int,
+    qk_rope_head_dim: int,
+    v_head_dim: int,
+    rope_theta: float = 10_000.0,
+    cache: MLACache | None = None,
+    mode: str = "train",
+) -> tuple[jnp.ndarray, MLACache | None]:
+    B, T, d = x.shape
+    H = num_heads
+    qk_head_dim = qk_nope_head_dim + qk_rope_head_dim
+    scale = 1.0 / math.sqrt(qk_head_dim)
+
+    cq = x @ params["w_dq"]                                    # (B,T,q_lora)
+    q = jnp.einsum("btr,rhk->bthk", cq, params["w_uq"])        # (B,T,H,nope+rope)
+    q_nope, q_pe = q[..., :qk_nope_head_dim], q[..., qk_nope_head_dim:]
+
+    if mode == "decode":
+        assert cache is not None and T == 1
+        pos = cache.index
+        q_pe = apply_rope(q_pe, jnp.full((B, 1), pos), rope_theta)
+        c_new = x @ params["w_dkv"]                            # (B,1,R)
+        kpe_new = apply_rope((x @ params["w_kpe"])[:, :, None, :],
+                             jnp.full((B, 1), pos), rope_theta)[:, :, 0]
+        S = cache.c_kv.shape[1]
+        slot = pos % S
+        c_all = lax.dynamic_update_slice(
+            cache.c_kv, c_new.astype(cache.c_kv.dtype), (0, slot, 0))
+        kpe_all = lax.dynamic_update_slice(
+            cache.k_pe, kpe_new.astype(cache.k_pe.dtype), (0, slot, 0))
+        # absorbed attention: score = q_nope @ W_uk^T @ c_kv + q_pe @ k_pe
+        q_abs = jnp.einsum("bthk,rhk->bthr", q_nope, params["w_uk"])  # (B,1,H,R)
+        s_nope = jnp.einsum("bthr,bsr->bhts", q_abs, c_all.astype(q_abs.dtype))
+        s_pe = jnp.einsum("bthk,bsk->bhts", q_pe, kpe_all.astype(q_pe.dtype))
+        s = (s_nope + s_pe).astype(jnp.float32) * scale        # (B,H,1,S)
+        k_pos = jnp.where(jnp.arange(S) < jnp.minimum(pos + 1, S),
+                          jnp.arange(S), -1)                   # ring validity
+        valid = (k_pos >= 0)
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        # out = p @ c_kv @ W_uv
+        ctx = jnp.einsum("bhts,bsr->bthr", p.astype(c_all.dtype), c_all)  # (B,1,H,R)
+        out = jnp.einsum("bthr,rhv->bthv", ctx, params["w_uv"])  # (B,1,H,v)
+        y = jnp.einsum("bthv,hvd->btd", out, params["w_o"])
+        return y, MLACache(c_all, kpe_all, pos + 1)
+
+    positions = jnp.arange(T)[None, :]
+    q_pe = apply_rope(q_pe, positions, rope_theta)
+    c_kv = x @ params["w_dkv"]                                 # (B,T,R)
+    k_pe = apply_rope((x @ params["w_kpe"])[:, :, None, :], positions,
+                      rope_theta)[:, :, 0]                     # (B,T,rope)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, params["w_uk"])
+    v = jnp.einsum("btr,rhv->bthv", c_kv, params["w_uv"])      # (B,T,H,v)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None], (B, T, H, qk_rope_head_dim))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    # pad v to qk_head_dim for the shared blockwise kernel, then slice
+    if v_head_dim < qk_head_dim:
+        v_in = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head_dim - v_head_dim)))
+    else:
+        v_in = v
+    qg = q_full.reshape(B, T, H, 1, qk_head_dim)
+    out = blockwise_attention(qg, k, v_in, causal=True, scale=scale)
+    out = out.reshape(B, T, H, qk_head_dim)[..., :v_head_dim]
+    y = jnp.einsum("bthv,hvd->btd", out, params["w_o"])
+
+    new_cache = None
+    if mode == "prefill":
+        size = cache.c_kv.shape[1] if cache is not None else T
+        dtype = cache.c_kv.dtype if cache is not None else jnp.bfloat16
+        keep = min(size, T)
+        ck = jnp.zeros((B, size, c_kv.shape[-1]), dtype).at[:, :keep].set(
+            c_kv[:, -keep:].astype(dtype))
+        kp = jnp.zeros((B, size, k_pe.shape[-1]), dtype).at[:, :keep].set(
+            k_pe[:, -keep:].astype(dtype))
+        new_cache = MLACache(ck, kp, jnp.asarray(T, jnp.int32))
+    return y, new_cache

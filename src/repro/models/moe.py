@@ -1,0 +1,249 @@
+"""Mixture-of-Experts layer (DBRX 16e/top-4; DeepSeek-V3 256e/top-8+shared).
+
+Capacity-based scatter/gather dispatch (no dense (T, E, C) one-hot tensor):
+tokens are routed with ``top_k``, each token's position within its expert is
+computed by a cumulative count, tokens beyond the expert capacity are
+dropped (contributing zero, standard Switch-style), and expert FFNs run as
+one batched einsum over the (E, C, d) buffer.  Experts shard over the
+"experts" logical axis (expert parallelism on the mesh "model" axis).
+
+The router aux loss is the usual load-balance term (mean fraction * mean
+probability per expert), returned so the train step can add it.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init
+
+
+def init_moe(key, d_model: int, expert_d_ff: int, num_experts: int,
+             num_shared: int, activation: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    gates = activation in ("swiglu", "geglu")
+    params: dict[str, Any] = {
+        "router": dense_init(ks[0], (d_model, num_experts), d_model, jnp.float32),
+        "wu": dense_init(ks[2], (num_experts, d_model, expert_d_ff), d_model, dtype),
+        "wd": dense_init(ks[3], (num_experts, expert_d_ff, d_model), expert_d_ff, dtype),
+    }
+    # NOTE: expert weights get their own logical axes ("expert_embed",
+    # "expert_mlp") instead of the dense "embed": FSDP-sharding the embed
+    # dim of expert tensors conflicts with the dispatch-buffer layout and
+    # makes GSPMD replicate the whole expert einsum (EXPERIMENTS.md §Perf,
+    # dbrx iteration 2).  FSDP rules shard "expert_mlp" over data instead
+    # (TP-within-experts), keeping the contraction dim replicated.
+    axes = {
+        "router": ("embed", "experts"),
+        "wu": ("experts", "expert_embed", "expert_mlp"),
+        "wd": ("experts", "expert_mlp", "expert_embed"),
+    }
+    if gates:
+        params["wg"] = dense_init(ks[1], (num_experts, d_model, expert_d_ff), d_model, dtype)
+        axes["wg"] = ("experts", "expert_embed", "expert_mlp")
+    if num_shared:
+        params["shared_wu"] = dense_init(ks[5], (d_model, num_shared * expert_d_ff), d_model, dtype)
+        params["shared_wd"] = dense_init(ks[6], (num_shared * expert_d_ff, d_model), expert_d_ff, dtype)
+        axes["shared_wu"] = ("embed", "mlp")
+        axes["shared_wd"] = ("mlp", "embed")
+        if gates:
+            params["shared_wg"] = dense_init(ks[4], (d_model, num_shared * expert_d_ff), d_model, dtype)
+            axes["shared_wg"] = ("embed", "mlp")
+    return params, axes
+
+
+def _expert_ffn(params, x, activation: str):
+    """x: (E, C, d) -> (E, C, d), batched over experts."""
+    if activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, params["wg"])) * \
+            jnp.einsum("ecd,edf->ecf", x, params["wu"])
+    elif activation == "geglu":
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, params["wg"]), approximate=True) * \
+            jnp.einsum("ecd,edf->ecf", x, params["wu"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", x, params["wu"]), approximate=True)
+    return jnp.einsum("ecf,efd->ecd", h, params["wd"])
+
+
+def moe_ffn(
+    params,
+    x: jnp.ndarray,                  # (B, T, d)
+    *,
+    num_experts: int,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    activation: str = "swiglu",
+    router_aux_weight: float = 0.01,
+    expert_sharding: str | None = None,
+    per_example_dispatch: bool = True,
+    dispatch: str = "einsum",            # "einsum" | "scatter"
+    dispatch_group: int = 512,           # token-chunk size for einsum dispatch
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (output, aux_loss).
+
+    ``per_example_dispatch`` (default): capacity is allocated per batch
+    row and the dispatch buffers keep the batch dimension —
+    (B, E, C_row, d).  This is what lets the expert einsum parallelize
+    over BOTH the data axis (batch) and the expert axis: a flat global
+    dispatch folds the data-sharded token dim into the capacity dim, and
+    GSPMD then all-gathers the tokens and replicates the whole expert
+    computation across the data axis (measured 16-17x FLOP inflation —
+    EXPERIMENTS.md §Perf, dbrx iterations 1-4).
+
+    ``expert_sharding``: mesh axis for the expert dim of the dispatch
+    buffers (usually "model"); propagated from the expert weights when
+    None, but an explicit constraint makes the intent robust.
+    """
+    B, T, d = x.shape
+
+    def _scatter_dispatch(xt, top_p, top_i, capacity):
+        """xt (S, d); top (S, k) -> (buf (E,C,d), keep, slot, flat_e)."""
+        S = xt.shape[0]
+        flat_e = top_i.reshape(-1)                              # (S*k,)
+        onehot = jax.nn.one_hot(flat_e, num_experts, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) * onehot               # rank within expert
+        pos = pos.sum(-1) - 1                                   # 0-based
+        keep = (pos < capacity) & (pos >= 0)
+        slot = jnp.clip(pos, 0, capacity - 1)
+        xk = jnp.repeat(xt, top_k, axis=0)
+        contrib = jnp.where(keep[:, None], xk, 0.0)
+        buf = jnp.zeros((num_experts, capacity, d), x.dtype)
+        buf = buf.at[flat_e, slot].add(contrib.astype(x.dtype))
+        return buf, keep, slot, flat_e
+
+    xt_all = x.reshape(B * T, d)
+    logits = (xt_all.astype(jnp.float32) @ params["router"])    # (B*T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = lax.top_k(probs, top_k)                      # (B*T, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    from jax.sharding import PartitionSpec as _P
+
+    if dispatch == "einsum" and per_example_dispatch:
+        # One-hot einsum dispatch (Switch/MeshTF formulation): no scatter,
+        # so GSPMD partitions the whole pipeline over (batch=data,
+        # experts=model).  The dispatch-tensor build costs ~G/(6*ff) of the
+        # expert FFN where G is the token-group size — chunking long
+        # sequences into groups of ``dispatch_group`` keeps it at a few
+        # percent regardless of T (EXPERIMENTS.md §Perf, v3 prefill iter 2;
+        # with G=T the cost is T/(6*ff), 2.7x the FFN for v3's 32k prefill).
+        G = max(1, min(dispatch_group, T))
+        pad_t = (-T) % G
+        ng = (T + pad_t) // G
+        xg = x
+        tpg = top_p.reshape(B, T, top_k)
+        tig = top_i.reshape(B, T, top_k)
+        if pad_t:
+            xg = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0)))
+            tpg = jnp.pad(tpg, ((0, 0), (0, pad_t), (0, 0)))
+            tig = jnp.pad(tig, ((0, 0), (0, pad_t), (0, 0)))
+        Bg, Tg = B * ng, G
+        xg = xg.reshape(Bg, Tg, d)
+        capacity = max(1, int(math.ceil(Tg * top_k / num_experts
+                                        * capacity_factor)))
+        tp = tpg.reshape(Bg, Tg, top_k)
+        ti = tig.reshape(Bg, Tg, top_k)
+        onehot_e = jax.nn.one_hot(ti, num_experts, dtype=jnp.float32)
+        # rank of each (t, k) slot within its expert, per group
+        flat = onehot_e.reshape(Bg, Tg * top_k, num_experts)
+        pos = jnp.cumsum(flat, axis=1) * flat                   # (Bg, Tg*k, E)
+        pos = (pos.sum(-1) - 1.0).reshape(Bg, Tg, top_k)        # 0-based ranks
+        keep = (pos < capacity) & (pos >= 0)
+        onehot_c = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                                  dtype=jnp.float32) * keep[..., None]
+        # (Bg,Tg,k,E) x (Bg,Tg,k,C) -> (Bg,Tg,E,C) one-hot dispatch mask
+        disp = jnp.einsum("btke,btkc->btec", onehot_e, onehot_c)
+        buf = jnp.einsum("btec,btd->becd", disp.astype(x.dtype), xg)
+        out_buf = jax.vmap(lambda b: _expert_ffn(params, b, activation))(buf)
+        comb = jnp.einsum("btke,btkc,btk->btec", onehot_e, onehot_c,
+                          tp.astype(jnp.float32)).astype(x.dtype)
+        # NOTE: constraining comb/out_buf on the expert axis here was
+        # measured 4x WORSE (forces materialization of the (B,T,E,C)
+        # mask; EXPERIMENTS.md §Perf pair-1 iteration 8, refuted).
+        # Propagation from the expert weights is the right layout source.
+        y = jnp.einsum("btec,becd->btd", comb, out_buf)
+        y = y.reshape(B, ng * G, d)[:, :T].reshape(B * T, d)
+    elif per_example_dispatch:
+        capacity = max(1, int(math.ceil(T * top_k / num_experts
+                                        * capacity_factor)))
+        buf, keep, slot, flat_e = jax.vmap(
+            lambda xr, pr, ir: _scatter_dispatch(xr, pr, ir, capacity)
+        )(x, top_p.reshape(B, T, top_k), top_i.reshape(B, T, top_k))
+        # buf: (B, E, C, d) — batch stays on the data axis
+        if expert_sharding is not None:
+            buf = jax.lax.with_sharding_constraint(
+                buf, _P(None, expert_sharding, None, None))
+        out_buf = jax.vmap(lambda b: _expert_ffn(params, b, activation))(buf)
+        if expert_sharding is not None:
+            out_buf = jax.lax.with_sharding_constraint(
+                out_buf, _P(None, expert_sharding, None, None))
+        gathered = jax.vmap(lambda ob, fe, sl: ob[fe, sl])(out_buf, flat_e, slot)
+        gathered = jnp.where(keep[..., None], gathered, 0.0)    # (B, T*k, d)
+        w = top_p.reshape(B, T * top_k, 1).astype(gathered.dtype)
+        y = (gathered * w).reshape(B, T, top_k, d).sum(axis=2).reshape(B * T, d)
+    else:
+        S = B * T
+        capacity = max(1, int(math.ceil(S * top_k / num_experts
+                                        * capacity_factor)))
+        buf, keep, slot, flat_e = _scatter_dispatch(xt_all, top_p, top_i, capacity)
+        if expert_sharding is not None:
+            buf = jax.lax.with_sharding_constraint(
+                buf, _P(expert_sharding, None, None))
+        out_buf = _expert_ffn(params, buf, activation)          # (E, C, d)
+        if expert_sharding is not None:
+            out_buf = jax.lax.with_sharding_constraint(
+                out_buf, _P(expert_sharding, None, None))
+        gathered = out_buf[flat_e, slot]                        # (S*k, d)
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        w = top_p.reshape(-1)[:, None].astype(gathered.dtype)
+        y = (gathered * w).reshape(S, top_k, d).sum(axis=1)
+    xt = xt_all
+
+    if "shared_wu" in params:
+        if "shared_wg" in params:
+            act = jax.nn.silu if activation == "swiglu" else (
+                lambda a: jax.nn.gelu(a, approximate=True))
+            h = act(xt @ params["shared_wg"]) * (xt @ params["shared_wu"])
+        else:
+            h = jax.nn.gelu(xt @ params["shared_wu"], approximate=True)
+        y = y + h @ params["shared_wd"]
+
+    # Switch-style load-balance aux loss.
+    frac = jnp.mean(jax.nn.one_hot(top_i[:, 0], num_experts, dtype=jnp.float32), axis=0)
+    mean_p = jnp.mean(probs, axis=0)
+    aux = router_aux_weight * num_experts * jnp.sum(frac * mean_p)
+
+    return y.reshape(B, T, d), aux
+
+
+def moe_ffn_dense_reference(params, x, *, num_experts: int, top_k: int,
+                            activation: str = "swiglu"):
+    """Droppedless dense oracle: every token computed by its top-k experts
+    via full (S, E) weighting.  O(S*E*ff) — tests only."""
+    B, T, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = lax.top_k(probs, top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(probs)
+    w = jnp.take_along_axis(w, top_i, axis=-1)
+    weights = jnp.zeros((xt.shape[0], num_experts), probs.dtype)
+    weights = weights.at[jnp.arange(xt.shape[0])[:, None], top_i].set(top_p)
+    per_expert = _expert_ffn(params, jnp.broadcast_to(xt, (num_experts,) + xt.shape),
+                             activation)                        # (E, S, d)
+    y = jnp.einsum("se,esd->sd", weights.astype(x.dtype), per_expert)
+    if "shared_wu" in params:
+        if "shared_wg" in params:
+            act = jax.nn.silu if activation == "swiglu" else (
+                lambda a: jax.nn.gelu(a, approximate=True))
+            h = act(xt @ params["shared_wg"]) * (xt @ params["shared_wu"])
+        else:
+            h = jax.nn.gelu(xt @ params["shared_wu"], approximate=True)
+        y = y + h @ params["shared_wd"]
+    return y.reshape(B, T, d)

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` resolution for all entry points."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCHITECTURES: dict[str, str] = {
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "paligemma-3b": "repro.configs.paligemma_3b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "smollm-360m": "repro.configs.smollm_360m",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "glm4-9b": "repro.configs.glm4_9b",
+    "gemma2-27b": "repro.configs.gemma2_27b",
+    # the paper's own simulated training model (Fig. 8)
+    "paper-7b": "repro.configs.paper_7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHITECTURES)}")
+    return importlib.import_module(ARCHITECTURES[arch]).CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    if arch not in ARCHITECTURES:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(ARCHITECTURES)}")
+    return importlib.import_module(ARCHITECTURES[arch]).smoke_config()
+
+
+def list_architectures() -> list[str]:
+    return sorted(ARCHITECTURES)

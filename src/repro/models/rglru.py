@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence (per channel):
+
+    r_t = sigmoid(W_r x_t)                      # recurrence gate
+    i_t = sigmoid(W_i x_t)                      # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)      # data-dependent decay
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+wrapped in Griffin's recurrent block: linear in -> temporal conv1d(4) ->
+RG-LRU -> gated linear out.  Train/prefill uses an associative scan
+(log-depth, TPU-friendly); decode is a single state update.
+
+The linear scan is also provided as a Pallas kernel target
+(``kernels/lru_scan.py``); this module is its jnp oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init
+
+
+def init_rglru_block(key, d_model: int, lru_width: int, conv_width: int,
+                     dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    w = lru_width
+    # Lambda init so a = exp(-c*softplus(L)) is spread in (0.9, 0.999) —
+    # the Griffin init.
+    u = jax.random.uniform(ks[0], (w,), minval=0.9, maxval=0.999)
+    c = 8.0
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / c))    # softplus^-1(-ln(u)/c)
+    params = {
+        "w_x": dense_init(ks[1], (d_model, w), d_model, dtype),     # input branch
+        "w_gate": dense_init(ks[2], (d_model, w), d_model, dtype),  # mult. gate branch
+        "conv_w": (jax.random.normal(ks[3], (conv_width, w)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_rg": dense_init(ks[4], (w, w), w, dtype),                # recurrence gate
+        "b_rg": jnp.zeros((w,), jnp.float32),
+        "w_ig": dense_init(ks[5], (w, w), w, dtype),                # input gate
+        "b_ig": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d_model), w, dtype),
+    }
+    axes = {
+        "w_x": ("embed", "lru"), "w_gate": ("embed", "lru"),
+        "conv_w": (None, "lru"), "conv_b": ("lru",),
+        "w_rg": ("lru", None), "b_rg": ("lru",),
+        "w_ig": ("lru", None), "b_ig": ("lru",),
+        "lam": ("lru",), "w_out": ("lru", "embed"),
+    }
+    return params, axes
+
+
+@dataclasses.dataclass
+class RGLRUState:
+    """Decode-time state: LRU hidden + conv tail window."""
+
+    h: jnp.ndarray                 # (B, W)
+    conv_tail: jnp.ndarray         # (B, conv_width-1, W)
+
+
+jax.tree_util.register_dataclass(
+    RGLRUState, data_fields=["h", "conv_tail"], meta_fields=[]
+)
+
+
+def init_rglru_state(batch: int, lru_width: int, conv_width: int,
+                     dtype=jnp.float32) -> RGLRUState:
+    return RGLRUState(
+        h=jnp.zeros((batch, lru_width), dtype),
+        conv_tail=jnp.zeros((batch, conv_width - 1, lru_width), dtype),
+    )
+
+
+C_CONST = 8.0
+
+
+def _gates(params, u):
+    """u: (..., W) post-conv activations -> (a, gated_input) in float32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ params["w_rg"].astype(jnp.float32) + params["b_rg"])
+    i = jax.nn.sigmoid(uf @ params["w_ig"].astype(jnp.float32) + params["b_ig"])
+    log_a = -C_CONST * jax.nn.softplus(params["lam"]) * r      # (..., W), <0
+    a = jnp.exp(log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * uf)
+    return a, x_in
+
+
+def lru_scan_ref(a: jnp.ndarray, x: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """h_t = a_t * h_{t-1} + x_t via associative scan.  a,x: (B,T,W)."""
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq, h_seq = lax.associative_scan(combine, (a, x), axis=1)
+    # fold in h0: h_t += (prod a_{1..t}) * h0
+    return h_seq + a_seq * h0[:, None, :]
+
+
+def rglru_block(
+    params,
+    x: jnp.ndarray,                # (B, T, d)
+    *,
+    conv_width: int,
+    state: RGLRUState | None = None,
+    mode: str = "train",
+) -> tuple[jnp.ndarray, RGLRUState | None]:
+    B, T, d = x.shape
+    u = x @ params["w_x"]                                       # (B,T,W)
+    gate = jax.nn.gelu((x @ params["w_gate"]).astype(jnp.float32), approximate=True)
+    W = u.shape[-1]
+
+    if mode == "decode":
+        assert state is not None and T == 1
+        hist = jnp.concatenate([state.conv_tail, u.astype(state.conv_tail.dtype)], axis=1)
+        win = hist[:, -conv_width:]                             # (B,cw,W)
+        cu = jnp.einsum("bcw,cw->bw", win.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+        a, x_in = _gates(params, cu[:, None])                   # (B,1,W)
+        h = a[:, 0] * state.h.astype(jnp.float32) + x_in[:, 0]
+        y = (h * gate[:, 0]) @ params["w_out"].astype(jnp.float32)
+        new_state = RGLRUState(h.astype(state.h.dtype),
+                               hist[:, -(conv_width - 1):])
+        return y[:, None].astype(x.dtype), new_state
+
+    # causal conv1d over time
+    pad = jnp.zeros((B, conv_width - 1, W), u.dtype)
+    if state is not None:
+        pad = state.conv_tail.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)                       # (B,T+cw-1,W)
+    idx = jnp.arange(T)[:, None] + jnp.arange(conv_width)[None, :]
+    windows = up[:, idx]                                         # (B,T,cw,W)
+    cu = jnp.einsum("btcw,cw->btw", windows.astype(jnp.float32),
+                    params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+
+    a, x_in = _gates(params, cu)                                 # (B,T,W)
+    h0 = state.h.astype(jnp.float32) if state is not None else jnp.zeros((B, W), jnp.float32)
+    h = lru_scan_ref(a, x_in, h0)                                # (B,T,W)
+    y = (h * gate) @ params["w_out"].astype(jnp.float32)
+
+    new_state = None
+    if mode == "prefill":
+        sdt = state.h.dtype if state is not None else jnp.float32
+        new_state = RGLRUState(
+            h[:, -1].astype(sdt),
+            up[:, -(conv_width - 1):].astype(sdt) if conv_width > 1
+            else jnp.zeros((B, 0, W), sdt))
+    return y.astype(x.dtype), new_state

@@ -1,0 +1,184 @@
+"""RWKV-6 "Finch" time-mix + channel-mix (arXiv:2404.05892).
+
+Attention-free: the WKV recurrence maintains a matrix-valued state
+S in R^{H x K x V} per head with *data-dependent* per-channel decay w_t
+(the Finch innovation over RWKV-5's static decay):
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = (r_t (S_{t-1} + diag(u) k_t^t v_t))        # bonus u on current token
+
+Token-shift mixes each input with the previous token through learned,
+data-dependent interpolation (low-rank, per Finch).
+
+Train/prefill: lax.scan over time (chunked formulation is the Pallas kernel
+target, ``kernels/rwkv_scan.py``).  Decode: single state update.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .layers import dense_init
+
+
+def init_rwkv_block(key, d_model: int, head_size: int, decay_lora: int,
+                    tokenshift_lora: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 16)
+    H = d_model // head_size
+    params = {
+        # time-mix projections
+        "w_r": dense_init(ks[0], (d_model, d_model), d_model, dtype),
+        "w_k": dense_init(ks[1], (d_model, d_model), d_model, dtype),
+        "w_v": dense_init(ks[2], (d_model, d_model), d_model, dtype),
+        "w_g": dense_init(ks[3], (d_model, d_model), d_model, dtype),
+        "w_o": dense_init(ks[4], (d_model, d_model), d_model, dtype),
+        # data-dependent decay (low-rank): w_t = exp(-exp(base + lora(x)))
+        "decay_base": jnp.full((d_model,), -6.0, jnp.float32),
+        "decay_a": dense_init(ks[5], (d_model, decay_lora), d_model, dtype),
+        "decay_b": dense_init(ks[6], (decay_lora, d_model), decay_lora, dtype),
+        # per-channel bonus for the current token
+        "u": (jax.random.normal(ks[7], (d_model,)) * 0.1).astype(jnp.float32),
+        # token-shift interpolation (one mu per projection role + lora)
+        "mu": (jax.random.uniform(ks[8], (5, d_model))).astype(jnp.float32),
+        "ts_a": dense_init(ks[9], (d_model, tokenshift_lora), d_model, dtype),
+        "ts_b": dense_init(ks[10], (tokenshift_lora, 5 * d_model), tokenshift_lora, dtype),
+        "ln_x_scale": jnp.ones((d_model,), jnp.float32),
+        # channel-mix
+        "cm_k": dense_init(ks[11], (d_model, d_model * 7 // 2), d_model, dtype),
+        "cm_v": dense_init(ks[12], (d_model * 7 // 2, d_model), d_model * 7 // 2, dtype),
+        "cm_mu": (jax.random.uniform(ks[13], (d_model,))).astype(jnp.float32),
+    }
+    axes = {
+        "w_r": ("embed", "heads"), "w_k": ("embed", "heads"),
+        "w_v": ("embed", "heads"), "w_g": ("embed", "heads"),
+        "w_o": ("heads", "embed"),
+        "decay_base": (None,), "decay_a": ("embed", None), "decay_b": (None, "heads"),
+        "u": (None,), "mu": (None, None),
+        "ts_a": ("embed", None), "ts_b": (None, None),
+        "ln_x_scale": (None,),
+        "cm_k": ("embed", "mlp"), "cm_v": ("mlp", "embed"),
+        "cm_mu": (None,),
+    }
+    return params, axes
+
+
+@dataclasses.dataclass
+class RWKVState:
+    s: jnp.ndarray                  # (B, H, K, V) wkv state
+    shift_tm: jnp.ndarray           # (B, d) previous token (time-mix)
+    shift_cm: jnp.ndarray           # (B, d) previous token (channel-mix)
+
+
+jax.tree_util.register_dataclass(
+    RWKVState, data_fields=["s", "shift_tm", "shift_cm"], meta_fields=[]
+)
+
+
+def init_rwkv_state(batch: int, d_model: int, head_size: int,
+                    dtype=jnp.float32) -> RWKVState:
+    H = d_model // head_size
+    return RWKVState(
+        s=jnp.zeros((batch, H, head_size, head_size), dtype),
+        shift_tm=jnp.zeros((batch, d_model), dtype),
+        shift_cm=jnp.zeros((batch, d_model), dtype),
+    )
+
+
+def _token_shift(x, prev):
+    """x: (B,T,d); prev: (B,d) last token of the previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv_scan_ref(r, k, v, w, u, s0):
+    """WKV recurrence oracle.
+
+    r,k,v,w: (B,T,H,K); u: (H,K); s0: (B,H,K,V=K).  Returns (out, sT):
+      out_t = r_t @ (S_{t-1} + u * k_t^T v_t);  S_t = w_t * S_{t-1} + k_t^T v_t
+    """
+    B, T, H, K = r.shape
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                               # (B,H,K)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)           # (B,H,K,V)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    sT, outs = lax.scan(step, s0, xs)
+    return outs.transpose(1, 0, 2, 3), sT                  # (B,T,H,V), (B,H,K,V)
+
+
+def rwkv_block(
+    params,
+    x: jnp.ndarray,                # (B,T,d)
+    *,
+    head_size: int,
+    state: RWKVState | None = None,
+    mode: str = "train",
+) -> tuple[jnp.ndarray, RWKVState | None]:
+    B, T, d = x.shape
+    H = d // head_size
+    xf = x.astype(jnp.float32)
+
+    prev_tm = state.shift_tm.astype(jnp.float32) if state is not None \
+        else jnp.zeros((B, d), jnp.float32)
+    xs = _token_shift(xf, prev_tm)                          # (B,T,d)
+
+    # Finch data-dependent token shift: per-role interpolation factors.
+    lora = jnp.tanh(xf @ params["ts_a"].astype(jnp.float32)) @ \
+        params["ts_b"].astype(jnp.float32)                  # (B,T,5d)
+    lora = lora.reshape(B, T, 5, d)
+    mix = jax.nn.sigmoid(params["mu"][None, None] + lora)   # (B,T,5,d)
+    xr, xk, xv, xw, xg = [
+        xf + mix[:, :, i] * (xs - xf) for i in range(5)
+    ]
+
+    r = (xr @ params["w_r"].astype(jnp.float32)).reshape(B, T, H, head_size)
+    k = (xk @ params["w_k"].astype(jnp.float32)).reshape(B, T, H, head_size)
+    v = (xv @ params["w_v"].astype(jnp.float32)).reshape(B, T, H, head_size)
+    g = jax.nn.silu(xg @ params["w_g"].astype(jnp.float32))
+
+    dec = params["decay_base"] + \
+        (jnp.tanh(xw @ params["decay_a"].astype(jnp.float32)) @
+         params["decay_b"].astype(jnp.float32))             # (B,T,d)
+    w = jnp.exp(-jnp.exp(dec)).reshape(B, T, H, head_size)  # in (0,1)
+    u = params["u"].reshape(H, head_size)
+
+    s0 = state.s.astype(jnp.float32) if state is not None \
+        else jnp.zeros((B, H, head_size, head_size), jnp.float32)
+    out, sT = wkv_scan_ref(r, k, v, w, u, s0)               # (B,T,H,K)
+
+    # group-norm per head (RWKV's ln_x), then gate and project out
+    o = out.reshape(B, T, H, head_size)
+    mu_ = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    o = (o - mu_) * lax.rsqrt(var + 64e-5)
+    o = o.reshape(B, T, d) * params["ln_x_scale"]
+    y_tm = (o * g) @ params["w_o"].astype(jnp.float32)
+
+    # channel-mix sublayer (with its own token shift)
+    h_in = xf + y_tm
+    prev_cm = state.shift_cm.astype(jnp.float32) if state is not None \
+        else jnp.zeros((B, d), jnp.float32)
+    hs = _token_shift(h_in, prev_cm)
+    cmix = params["cm_mu"][None, None]
+    hk = h_in + cmix * (hs - h_in)
+    cm = jnp.square(jax.nn.relu(hk @ params["cm_k"].astype(jnp.float32)))
+    y = y_tm + cm @ params["cm_v"].astype(jnp.float32)
+
+    new_state = None
+    if mode in ("prefill", "decode"):
+        sdt = state.s.dtype if state is not None else jnp.float32
+        new_state = RWKVState(
+            s=sT.astype(sdt),
+            shift_tm=xf[:, -1].astype(sdt),
+            shift_cm=h_in[:, -1].astype(sdt),
+        )
+    return y.astype(x.dtype), new_state

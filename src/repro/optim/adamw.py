@@ -1,0 +1,71 @@
+"""AdamW in pure JAX (decoupled weight decay, bias-corrected moments)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float | None = 1.0
+
+
+def init_opt_state(params) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """One AdamW step.  Returns (new_params, new_state, grad_norm)."""
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+    else:
+        gnorm = global_norm(grads)
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        new_p = p.astype(jnp.float32) - lr * (step + cfg.weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, gnorm

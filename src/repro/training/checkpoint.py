@@ -1,0 +1,69 @@
+"""Lightweight checkpointing: flat-path npz + json metadata.
+
+Complementary to R2CCL (the paper positions hot repair as reducing how
+often you must fall back to checkpoint recovery, not replacing it).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"#{k.idx}"
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)
+
+
+def save_checkpoint(path: str, state, step: int, extra: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(path, f"step_{step}.npz"), **flat)
+    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
+    with open(os.path.join(path, f"step_{step}.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[len("step_"):-len(".json")])
+             for f in os.listdir(path) if f.endswith(".json") and f.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, state_template, step: int | None = None):
+    """Restore into the structure of ``state_template`` (shapes must match)."""
+    step = step if step is not None else latest_step(path)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"step_{step}.npz"))
+    leaves_with_path, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    new_leaves = []
+    for pth, leaf in leaves_with_path:
+        key = SEP.join(_key_str(k) for k in pth)
+        arr = data[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

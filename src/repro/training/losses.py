@@ -1,0 +1,22 @@
+"""Per-modality training objectives."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import cross_entropy
+
+
+def task_loss(cfg: ModelConfig, logits: jnp.ndarray, batch) -> jnp.ndarray:
+    """Next-token CE for text, prefix-offset CE for VLM, masked-unit
+    prediction for audio encoders."""
+    if cfg.modality.kind == "vision_text":
+        p = cfg.modality.num_prefix_tokens
+        t = batch["labels"].shape[1]
+        # position P+i predicts text token i+1 (= labels[i])
+        return cross_entropy(logits[:, p:p + t], batch["labels"])
+    if cfg.modality.kind == "audio_frames":
+        return cross_entropy(logits, batch["labels"],
+                             mask=batch.get("loss_mask"))
+    return cross_entropy(logits, batch["labels"])

@@ -1,0 +1,31 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
+real single CPU device.  Multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` before importing jax.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run a python snippet in a subprocess with N virtual host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=timeout)
+    assert out.returncode == 0, f"stderr:\n{out.stderr[-3000:]}"
+    return out.stdout
+
+
+@pytest.fixture(scope="session")
+def multidevice():
+    return run_multidevice

@@ -1,0 +1,78 @@
+"""Section 5.1: R2CCL-Balance NIC-level redistribution."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.balance import (
+    DetourPath,
+    choose_detour_path,
+    hot_repair_plan,
+    rebalance,
+)
+from repro.core.topology import NodeTopology
+
+
+def _node():
+    return NodeTopology(node_id=0)
+
+
+def test_no_failure_identity():
+    plan = rebalance(_node(), [100.0] * 8)
+    assert all(f.path is DetourPath.AFFINITY for f in plan.flows)
+    assert plan.completion_time == pytest.approx(plan.completion_time_ideal)
+
+
+@settings(max_examples=30, deadline=None)
+@given(loads=st.lists(st.floats(1.0, 1e9), min_size=8, max_size=8),
+       failed_rail=st.integers(0, 7))
+def test_rebalance_conserves_bytes(loads, failed_rail):
+    node = _node()
+    plan = rebalance(node, loads, failed=[(0, failed_rail)])
+    assert sum(plan.nic_load.values()) == pytest.approx(sum(loads), rel=1e-6)
+    assert (0, failed_rail) not in plan.nic_load
+
+
+@settings(max_examples=30, deadline=None)
+@given(failed_rail=st.integers(0, 7))
+def test_balance_beats_hot_repair(failed_rail):
+    node = _node()
+    loads = [100e6] * 8
+    bal = rebalance(node, loads, failed=[(0, failed_rail)])
+    hot = hot_repair_plan(node, loads, failed=[(0, failed_rail)])
+    assert bal.completion_time <= hot.completion_time + 1e-9
+    # hot repair doubles one NIC: completion = 2/g vs ideal 1/(g-1)
+    # -> 2(g-1)/g = 1.75x ideal for g=8
+    assert hot.completion_time >= 1.7 * bal.completion_time_ideal
+
+
+def test_balance_approaches_residual_ideal():
+    """Paper: Balance's completion approaches D_i / B_i^rem."""
+    node = _node()
+    plan = rebalance(node, [100e6] * 8, failed=[(0, 3)])
+    assert plan.completion_time <= plan.completion_time_ideal * 1.25
+
+
+def test_multi_failure_balance():
+    node = _node()
+    plan = rebalance(node, [100e6] * 8, failed=[(0, 0), (0, 1), (0, 2)])
+    assert len(plan.nic_load) == 5
+    assert sum(plan.nic_load.values()) == pytest.approx(800e6, rel=1e-6)
+
+
+def test_detour_path_policy():
+    node = _node()
+    # same-NUMA backup with PCIe headroom -> direct PCIe
+    backup_same = node.nics[1]
+    assert choose_detour_path(node, 0, backup_same, pcie_headroom=1e9) \
+        is DetourPath.PCIE_DIRECT
+    # cross-NUMA: NVLink PXN wins over UPI (paper topology: NVLink >> UPI)
+    backup_far = node.nics[7]
+    p = choose_detour_path(node, 0, backup_far, pcie_headroom=0)
+    assert p in (DetourPath.PXN, DetourPath.PCIE_UPI)
+    assert p is DetourPath.PXN            # NVLink headroom > UPI on this node
+
+
+def test_no_healthy_nics_raises():
+    node = _node()
+    with pytest.raises(ValueError):
+        rebalance(node, [1.0] * 8, failed=[(0, r) for r in range(8)])

@@ -1,0 +1,84 @@
+"""Alpha-beta simulator regressions: the paper-claim regimes must hold."""
+
+import pytest
+
+from repro.core.comm_sim import (
+    ServeJob,
+    TrainJob,
+    adapcc_overhead,
+    iteration_time,
+    monte_carlo_multi_failure,
+    request_latency_under_failure,
+    strategy_rate,
+    training_overhead,
+)
+from repro.core.comm_sim import NIC_200G
+from repro.core.failures import FailureState, random_failures, single_nic_failure
+from repro.core.topology import IB_NIC_BW, make_cluster
+
+
+def test_strategy_rate_ordering():
+    """hot_repair < balance < r2ccl <= 1 for a single NIC failure."""
+    kw = dict(n_nodes=8, g=8)
+    hot = strategy_rate("hot_repair", 400e9, 0.125, **kw)
+    bal = strategy_rate("balance", 400e9, 0.125, **kw)
+    r2 = strategy_rate("r2ccl", 400e9, 0.125, **kw)
+    ring = strategy_rate("ring", 400e9, 0.125, **kw)
+    assert hot < bal < r2 <= 1.0
+    assert bal < ring < r2       # balance pays detour tax; r2ccl beats ring
+
+
+def test_fig15_regimes():
+    assert strategy_rate("hot_repair", 400e9, 0.125, n_nodes=2, g=8) == 0.5
+    assert strategy_rate("balance", 400e9, 0.125, n_nodes=2, g=8) == \
+        pytest.approx(0.83, abs=0.01)
+    assert strategy_rate("r2ccl", 400e9, 0.125, n_nodes=2, g=8) == \
+        pytest.approx(0.93, abs=0.01)
+
+
+def test_training_overhead_headline():
+    """<1% training overhead under a single NIC failure (paper abstract)."""
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    from repro.core.comm_sim import H100_BF16_FLOPS
+    job = TrainJob(params=2.7e9, dp=16, tp=1, pp=1, global_batch=256,
+                   seq_len=2048, flops_per_chip=H100_BF16_FLOPS, nic_stripe=3)
+    ov = training_overhead(job, cluster, single_nic_failure(0, 0), strategy="r2ccl")
+    assert 0 < ov < 0.01
+
+
+def test_adapcc_cannot_do_tp_pp():
+    cluster = make_cluster(2, 8)
+    job = TrainJob(params=13e9, dp=1, tp=8, pp=2)
+    assert adapcc_overhead(job, cluster, single_nic_failure(0, 0)) is None
+
+
+def test_multi_failure_sublinear():
+    cluster = make_cluster(64, 8, nic_bandwidth=NIC_200G)
+    job = TrainJob(params=7e9, dp=128, tp=4, pp=1, global_batch=512)
+    mc1 = monte_carlo_multi_failure(job, cluster, 1, trials=5)
+    mc10 = monte_carlo_multi_failure(job, cluster, 10, trials=5)
+    assert mc10["mean"] < 10 * max(mc1["mean"], 1e-6)
+    assert mc10["mean"] < 0.10        # paper: 4.3%
+
+
+def test_inference_overhead_headline():
+    """<3% inference overhead under failure (paper abstract)."""
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    job = ServeJob(params=405e9, tp=8, pp=2)
+    out = request_latency_under_failure(job, cluster, single_nic_failure(0, 0),
+                                        strategy="r2ccl",
+                                        fail_at_decode_step=100)
+    assert 0 <= out["overhead"] < 0.03
+
+
+def test_iteration_breakdown_consistency():
+    cluster = make_cluster(4, 8)
+    job = TrainJob(params=7e9, dp=32, tp=1, pp=1)
+    it = iteration_time(job, cluster, FailureState(), strategy="ring")
+    assert it.total >= it.compute
+    assert it.total == pytest.approx(it.compute + it.exposed_comm)
+    st = FailureState()
+    for f in single_nic_failure(0, 0):
+        st.apply(f)
+    it2 = iteration_time(job, cluster, st, strategy="hot_repair")
+    assert it2.total > it.total

@@ -1,0 +1,90 @@
+"""Section 4.1-4.2: bilateral awareness + probe triangulation."""
+
+import itertools
+
+import pytest
+
+from repro.core.detection import (
+    FailureDetector,
+    FaultLocation,
+    NCCL_DEFAULT_TIMEOUT,
+    ProbeOutcome,
+    probe_outcome,
+    triangulate,
+)
+from repro.core.failures import Failure, FailureState, FailureType
+
+
+def test_triangulation_truth_table():
+    ok, to, le = ProbeOutcome.OK, ProbeOutcome.TIMEOUT, ProbeOutcome.LOCAL_ERROR
+    # local NIC dead
+    assert triangulate(le, to, to, ok) is FaultLocation.LOCAL_NIC
+    # remote NIC dead
+    assert triangulate(to, le, ok, to) is FaultLocation.REMOTE_NIC
+    # link broken: both time out, aux reaches both endpoints
+    assert triangulate(to, to, ok, ok) is FaultLocation.LINK
+    # aux distinguishes single-endpoint impairment
+    assert triangulate(to, to, to, ok) is FaultLocation.LOCAL_NIC
+    assert triangulate(to, to, ok, to) is FaultLocation.REMOTE_NIC
+
+
+def test_probe_outcomes():
+    assert probe_outcome(True, False, False) is ProbeOutcome.LOCAL_ERROR
+    assert probe_outcome(False, True, False) is ProbeOutcome.TIMEOUT
+    assert probe_outcome(False, False, True) is ProbeOutcome.TIMEOUT
+    assert probe_outcome(False, False, False) is ProbeOutcome.OK
+
+
+@pytest.mark.parametrize("ftype,expected", [
+    (FailureType.NIC_HARDWARE, FaultLocation.LOCAL_NIC),
+    (FailureType.LINK_DOWN, FaultLocation.LINK),
+])
+def test_end_to_end_detection(ftype, expected):
+    det = FailureDetector(FailureState())
+    f = Failure(ftype, 0, 0)
+    diag = det.detect(f, (0, 0), (1, 0), aux=(2, 0))
+    assert diag.location is expected
+    # milliseconds, not the minutes of an NCCL timeout
+    assert diag.detect_latency < 1e-2
+    assert diag.localize_latency < 1e-2
+    assert diag.localize_latency >= diag.detect_latency
+    assert NCCL_DEFAULT_TIMEOUT / diag.detect_latency > 1e4
+
+
+def test_bilateral_vs_unilateral():
+    det_uni = FailureDetector(FailureState(), bilateral=False)
+    f = Failure(FailureType.NIC_HARDWARE, 0, 0)
+    diag = det_uni.detect(f, (0, 0), (1, 0), aux=(2, 0))
+    assert diag.detect_latency >= NCCL_DEFAULT_TIMEOUT  # peer spins to timeout
+
+
+def test_event_log_ordering():
+    det = FailureDetector(FailureState())
+    det.detect(Failure(FailureType.NIC_HARDWARE, 0, 1), (0, 1), (1, 1), aux=(2, 0))
+    times = [e.time for e in det.log]
+    assert times == sorted(times)
+    kinds = [e.kind for e in det.log]
+    assert kinds[0] == "failure" and kinds[-1] == "diagnosis_broadcast"
+
+
+def test_reprobe_recovery():
+    st = FailureState()
+    st.apply(Failure(FailureType.NIC_HARDWARE, 0, 0))
+    det = FailureDetector(st)
+    healthy, nxt = det.reprobe((0, 0), now=5.0, recovered=True)
+    assert healthy and (0, 0) not in st.failed_nics
+    assert nxt > 5.0
+
+
+def test_failure_scope_table2():
+    st = FailureState()
+    assert st.apply(Failure(FailureType.NIC_HARDWARE, 0, 0))
+    assert st.apply(Failure(FailureType.QP_ERROR, 0, 1))
+    # partial types depend on escalation
+    assert st.apply(Failure(FailureType.LINK_FLAPPING, 1, 0, escalates=True))
+    assert not st.apply(Failure(FailureType.CRC_ERROR, 1, 1, escalates=False))
+    # out of scope
+    assert not st.apply(Failure(FailureType.NVLINK, 2, 0))
+    assert not st.apply(Failure(FailureType.SWITCH_OUTAGE, 2, -1))
+    assert len(st.unsupported) == 3
+    assert st.failed_on_node(0) == {0, 1}

@@ -1,0 +1,88 @@
+"""Section 4.3: multi-NIC registration + DMA-buffer rollback (lossless
+under arbitrary failure points — property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.detection import FailureDetector
+from repro.core.failures import Failure, FailureState, FailureType
+from repro.core.migration import (
+    BACKUP_ACTIVATION,
+    ChunkTransfer,
+    GPU_BUFFER_REGISTRATION,
+    RDMA_CONNECTION_SETUP,
+    RegistrationTable,
+    TransferError,
+    migration_latency,
+)
+from repro.core.topology import NodeTopology
+
+
+def _chain(failed=()):
+    return RegistrationTable(NodeTopology(node_id=0)).failover_chain(0, failed)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    size=st.integers(10, 2000),
+    num_chunks=st.integers(1, 32),
+    fails=st.dictionaries(st.integers(0, 60), st.floats(0.0, 1.0), max_size=5),
+)
+def test_rollback_lossless(size, num_chunks, fails):
+    rng = np.random.default_rng(size)
+    xfer = ChunkTransfer(rng.normal(size=size), num_chunks, _chain())
+    xfer.run_to_completion(failure_plan=fails)
+    assert xfer.verify_lossless()
+    assert xfer.failovers <= len(fails)
+
+
+def test_partial_write_overwritten():
+    rng = np.random.default_rng(0)
+    xfer = ChunkTransfer(rng.normal(size=100), 10, _chain())
+    with pytest.raises(TransferError):
+        xfer.step(fail_after_post=True, partial_write_fraction=0.7)
+    xfer.rollback_and_failover()
+    xfer.run_to_completion()
+    assert xfer.verify_lossless()              # garbage got overwritten
+
+
+def test_chain_exhaustion():
+    rng = np.random.default_rng(0)
+    xfer = ChunkTransfer(rng.normal(size=50), 5, _chain()[:2])
+    xfer.rollback_and_failover()
+    with pytest.raises(TransferError):
+        xfer.rollback_and_failover()
+
+
+def test_failover_chain_ordering():
+    node = NodeTopology(node_id=0)
+    chain = node.failover_chain(device=0)
+    dists = [node.pcie_distance(0, nic) for nic in chain]
+    assert dists == sorted(dists)              # PCIe-distance ordered
+    # affinity NIC first when healthy
+    assert chain[0].rail in (0, 1)
+    # failed affinity NIC is excluded
+    chain2 = node.failover_chain(device=0, failed=[(0, 0)])
+    assert all(nic.key != (0, 0) for nic in chain2)
+
+
+def test_preregistration_latency_advantage():
+    det = FailureDetector(FailureState())
+    diag = det.detect(Failure(FailureType.NIC_HARDWARE, 0, 0), (0, 0), (1, 0),
+                      aux=(2, 0))
+    hot = migration_latency(diag, 10 << 20, 50e9, pre_registered=True)
+    cold = migration_latency(diag, 10 << 20, 50e9, pre_registered=False,
+                             num_buffers=4)
+    assert hot["total"] < 5e-3                 # low-millisecond (paper)
+    assert cold["total"] > hot["total"] * 5
+    assert cold["activation"] == pytest.approx(
+        GPU_BUFFER_REGISTRATION * 4 + RDMA_CONNECTION_SETUP)
+    assert hot["activation"] == BACKUP_ACTIVATION
+
+
+def test_registration_init_cost_scales_with_nics():
+    node = NodeTopology(node_id=0)
+    t = RegistrationTable(node)
+    assert t.init_cost(10) == pytest.approx(
+        GPU_BUFFER_REGISTRATION * 10 * (len(node.nics) - 1))

@@ -1,0 +1,140 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one forward/train
+step with shape + finiteness assertions, and prefill/decode parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_batch
+from repro.models import (
+    apply_model,
+    get_config,
+    get_smoke_config,
+    init_caches,
+    init_model,
+    list_architectures,
+)
+from repro.optim import AdamWConfig
+from repro.training import init_train_state, make_train_step
+
+ARCHS = [a for a in list_architectures() if a != "paper-7b"]
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    if cfg.modality.kind == "vision_text":
+        P = cfg.modality.num_prefix_tokens
+        return {
+            "patches": jax.random.normal(key, (B, P, cfg.modality.frontend_dim)),
+            "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        }, P + T
+    if cfg.modality.kind == "audio_frames":
+        return {"frames": jax.random.normal(key, (B, T, cfg.modality.frontend_dim))}, T
+    return {"tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size)}, T
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_smoke_config(arch)
+    assert cfg.d_model <= 512 and cfg.num_layers <= 3
+    if cfg.moe:
+        assert cfg.moe.num_experts <= 4
+    params, axes = init_model(jax.random.PRNGKey(0), cfg)
+    batch, exp_t = _batch(cfg, jax.random.PRNGKey(1))
+    logits, caches, aux = apply_model(params, cfg, batch, mode="train")
+    assert logits.shape == (B, exp_t, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert caches is None
+    # axes pytree mirrors params
+    pl = jax.tree_util.tree_leaves(params)
+    al = jax.tree_util.tree_leaves(
+        axes, is_leaf=lambda x: isinstance(x, tuple) and all(
+            e is None or isinstance(e, str) for e in x))
+    assert len(pl) == len(al)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params)
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3), sync="xla"))
+    b = make_batch(cfg, seq_len=T, batch_size=B, step=0)
+    batch = {k: jnp.asarray(v) for k, v in b.items()}
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    assert int(state.step) == 1
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not get_smoke_config(a).encoder_only])
+def test_decode_matches_train(arch):
+    cfg = get_smoke_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg.vocab_size)
+    batch, full_t = _batch(cfg, jax.random.PRNGKey(1))
+    if "tokens" in batch:
+        batch["tokens"] = tokens
+    nxt = jax.random.randint(jax.random.PRNGKey(2), (B, 1), 0, cfg.vocab_size)
+    fb = dict(batch)
+    fb["tokens"] = jnp.concatenate([tokens, nxt], 1)
+    lg_full, _, _ = apply_model(params, cfg, fb, mode="train")
+    caches = init_caches(cfg, B, full_t + 4, dtype=jnp.float32)
+    lg_pre, caches, _ = apply_model(params, cfg, batch, mode="prefill",
+                                    caches=caches)
+    np.testing.assert_allclose(np.asarray(lg_pre[:, -1], np.float32),
+                               np.asarray(lg_full[:, full_t - 1], np.float32),
+                               atol=5e-2, rtol=1e-2)
+    lg_dec, _, _ = apply_model(params, cfg, {"tokens": nxt}, mode="decode",
+                               caches=caches)
+    np.testing.assert_allclose(np.asarray(lg_dec[:, -1], np.float32),
+                               np.asarray(lg_full[:, -1], np.float32),
+                               atol=5e-2, rtol=1e-2)
+
+
+def test_full_configs_match_assignment():
+    """The published full configs carry the exact assigned dimensions."""
+    spec = {
+        "recurrentgemma-9b": (38, 4096, 12288, 256_000),
+        "paligemma-3b": (18, 2048, 16384, 257_216),
+        "deepseek-67b": (95, 8192, 22016, 102_400),
+        "dbrx-132b": (40, 6144, 10752, 100_352),
+        "smollm-360m": (32, 960, 2560, 49_152),
+        "hubert-xlarge": (48, 1280, 5120, 504),
+        "rwkv6-1.6b": (24, 2048, 7168, 65_536),
+        "glm4-9b": (40, 4096, 13696, 151_552),
+        "gemma2-27b": (46, 4608, 36864, 256_000),
+    }
+    for arch, (L, d, ff, v) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.d_ff == ff, arch
+        assert cfg.vocab_size == v, arch
+    v3 = get_config("deepseek-v3-671b")
+    assert (v3.num_layers, v3.d_model, v3.vocab_size) == (61, 7168, 129_280)
+    assert v3.moe.num_experts == 256 and v3.moe.top_k == 8
+    assert v3.moe.num_shared_experts == 1
+    assert v3.attention.kind == "mla"
+    dbrx = get_config("dbrx-132b")
+    assert dbrx.moe.num_experts == 16 and dbrx.moe.top_k == 4
+
+
+def test_param_counts_in_range():
+    """Sanity: param_count() lands near the advertised sizes."""
+    for arch, lo, hi in [
+        ("deepseek-67b", 55e9, 80e9),
+        ("dbrx-132b", 110e9, 150e9),
+        ("deepseek-v3-671b", 550e9, 750e9),
+        ("gemma2-27b", 22e9, 32e9),
+        ("smollm-360m", 0.25e9, 0.45e9),
+        ("rwkv6-1.6b", 1.2e9, 2.2e9),
+    ]:
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+    v3 = get_config("deepseek-v3-671b")
+    assert v3.active_param_count() < 0.12 * v3.param_count()

@@ -1,0 +1,81 @@
+"""Appendix A: optimal partition math (property-based)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    brute_force_y,
+    plan_partition,
+    plan_partition_overlapped,
+    ring_coeff,
+    ring_time,
+    stage_times,
+    total_time,
+    total_time_overlapped,
+    x_threshold,
+    y_star,
+    y_star_overlapped,
+)
+
+
+@given(n=st.integers(2, 32), g=st.integers(2, 16))
+def test_threshold_formula(n, g):
+    ng = n * g
+    assert abs(x_threshold(n, g) - ng / (3 * ng - 2)) < 1e-12
+    # threshold always in (1/3, 0.35] for ng >= 4 — the paper's 1/3 rule
+    assert 1 / 3 < x_threshold(n, g) <= 0.5
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(0.05, 0.95), n=st.integers(3, 16), g=st.integers(2, 8))
+def test_y_star_is_global_min(x, n, g):
+    ys = y_star(x, n, g)
+    yb = brute_force_y(x, n, g, grid=4000)
+    assert total_time(ys, x, n, g) <= total_time(yb, x, n, g) + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(0.01, 0.99), n=st.integers(3, 16), g=st.integers(2, 8))
+def test_plan_never_worse_than_ring(x, n, g):
+    plan = plan_partition(x, n, g, practice_threshold=False)
+    assert plan.t_r2ccl <= plan.t_ring + 1e-9
+    if x <= x_threshold(n, g):
+        assert not plan.use_r2ccl          # Appendix A: ring optimal below thr
+
+
+@settings(max_examples=30, deadline=None)
+@given(x=st.floats(0.01, 0.95), n=st.integers(3, 16), g=st.integers(2, 8))
+def test_overlapped_beats_serialized(x, n, g):
+    """The stage-2-overlap variant dominates the serialized model and beats
+    plain ring for every X>0 (the paper's measured behavior)."""
+    po = plan_partition_overlapped(x, n, g)
+    ps = plan_partition(x, n, g, practice_threshold=False)
+    assert po.t_r2ccl <= ps.t_r2ccl + 1e-9
+    if x > 0.02:
+        assert po.use_r2ccl
+        assert po.t_r2ccl < ring_time(x, n, g)
+
+
+@given(x=st.floats(0.05, 0.95), n=st.integers(3, 12), g=st.integers(2, 8))
+def test_stage_times_positive(x, n, g):
+    t1, t2, t3 = stage_times(0.3, x, n, g)
+    assert t1 >= 0 and t2 >= 0 and t3 >= 0
+
+
+def test_matches_paper_regimes():
+    # X=0.125 (1 of 8 NICs), 2x8 testbed: overlapped model ~0.93-0.96 of
+    # healthy throughput (Fig. 15 measures 0.93)
+    y = y_star_overlapped(0.125, 2, 8)
+    frac = ring_coeff(16) / total_time_overlapped(y, 0.125, 2, 8)
+    assert 0.9 < frac < 1.0
+    # serialized Appendix-A model at the same point says use plain ring
+    assert plan_partition(0.125, 2, 8).use_r2ccl is False
+
+
+def test_invalid_x():
+    with pytest.raises(ValueError):
+        plan_partition(1.5, 4, 8)
+    with pytest.raises(ValueError):
+        y_star(1.0, 4, 8)

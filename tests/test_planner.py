@@ -1,0 +1,80 @@
+"""Table 1 + Section 6: alpha-beta planner strategy selection."""
+
+import pytest
+
+from repro.core.failures import (
+    FailureState,
+    concentrated_failures,
+    random_failures,
+    single_nic_failure,
+)
+from repro.core.planner import Collective, CommConfig, Planner, Strategy
+from repro.core.topology import make_cluster
+
+
+def _state(failures):
+    st = FailureState()
+    for f in failures:
+        st.apply(f)
+    return st
+
+
+@pytest.fixture
+def planner():
+    return Planner(make_cluster(8, 8))
+
+
+def test_no_failure_ring(planner):
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, FailureState())
+    assert plan.strategy is Strategy.RING
+
+
+def test_small_message_latency_bound(planner):
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 10, FailureState())
+    assert plan.strategy in (Strategy.TREE, Strategy.RING)
+
+
+def test_single_failure_large_allreduce_uses_decomposition(planner):
+    st = _state(single_nic_failure(2, 3))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st)
+    assert plan.strategy is Strategy.R2CCL_ALL_REDUCE
+    assert plan.degraded_node == 2
+    assert 0 < plan.partition_y < 1
+    assert plan.lost_fraction == pytest.approx(0.125)
+
+
+def test_table1_non_allreduce_uses_balance(planner):
+    st = _state(single_nic_failure(2, 3))
+    for coll in (Collective.ALL_GATHER, Collective.REDUCE_SCATTER,
+                 Collective.BROADCAST, Collective.ALL_TO_ALL):
+        plan = planner.choose_strategy(coll, 1 << 30, st)
+        assert plan.strategy is Strategy.BALANCE, coll
+
+
+def test_latency_bound_allreduce_uses_balance(planner):
+    st = _state(single_nic_failure(2, 3))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 12, st)
+    assert plan.strategy is Strategy.BALANCE
+
+
+def test_multi_failure_spectrum_recursive(planner):
+    # different nodes losing different NIC counts -> bandwidth spectrum
+    fails = (concentrated_failures(1, [0, 1, 2, 3]) +
+             concentrated_failures(4, [0, 1]) + single_nic_failure(6, 5))
+    st = _state(fails)
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st)
+    assert plan.strategy in (Strategy.RECURSIVE, Strategy.BALANCE)
+
+
+def test_reranking_engaged_on_rail_mismatch(planner):
+    from repro.core.failures import rail_mismatch_failures
+    st = _state(rail_mismatch_failures(0, 1, 0, 5))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st)
+    assert sorted(plan.ring_order) == list(range(8))
+
+
+def test_comm_config_kwargs():
+    c = CommConfig(mode="r2ccl", degraded_rank=3, lost_fraction=0.5)
+    kw = c.kwargs()
+    assert kw["mode"] == "r2ccl" and kw["degraded"] == 3
+    assert kw["bandwidths"] is None

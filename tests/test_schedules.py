@@ -1,0 +1,162 @@
+"""Collective schedule IR + numpy executor: semantic correctness
+(property-based over ring sizes, payloads, degraded nodes)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allreduce import (
+    bottleneck_traffic,
+    build_partial_all_reduce,
+    build_r2ccl_all_reduce,
+)
+from repro.core.executor_np import (
+    ExecStats,
+    all_reduce_oracle,
+    check_all_reduce,
+    execute_chunk_schedule,
+    execute_program,
+)
+from repro.core.recursive import build_recursive_all_reduce, spectrum_levels
+from repro.core.schedule import (
+    build_ring_all_gather,
+    build_ring_all_reduce,
+    build_ring_broadcast,
+    build_ring_reduce_scatter,
+    ring_program,
+)
+
+
+def _data(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=size) for _ in range(n)]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 12), size=st.integers(1, 300), seed=st.integers(0, 99))
+def test_ring_allreduce_correct(n, size, seed):
+    prog = ring_program(list(range(n)), n)
+    assert check_all_reduce(prog, _data(n, size, seed))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 12), deg=st.integers(0, 11), x=st.floats(0.05, 0.9),
+       size=st.integers(2, 200), seed=st.integers(0, 99))
+def test_r2ccl_allreduce_correct(n, deg, x, size, seed):
+    deg = deg % n
+    prog, plan = build_r2ccl_all_reduce(list(range(n)), deg, x=x, g=8)
+    assert check_all_reduce(prog, _data(n, size, seed))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 10), seed=st.integers(0, 50))
+def test_recursive_allreduce_correct(n, seed):
+    rng = np.random.default_rng(seed)
+    bw = list(rng.uniform(100, 400, size=n))
+    prog, levels = build_recursive_all_reduce(bw)
+    assert check_all_reduce(prog, _data(n, 64, seed))
+    assert abs(sum(lv.frac for lv in levels) - 1.0) < 1e-9
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 10), root=st.integers(0, 9), size=st.integers(1, 128))
+def test_broadcast_correct(n, root, size):
+    root = root % n
+    data = _data(n, size)
+    sched = build_ring_broadcast(list(range(n)), n, root=root)
+    out = execute_chunk_schedule(sched, data)
+    for o in out:
+        assert np.allclose(o, data[root])
+
+
+@given(n=st.integers(2, 10))
+def test_reduce_scatter_ownership(n):
+    data = _data(n, n * 8)
+    sched = build_ring_reduce_scatter(list(range(n)), n)
+    out = execute_chunk_schedule(sched, data)
+    want = all_reduce_oracle(data).reshape(n, -1)
+    for i in range(n):
+        owned = (i + 1) % n
+        got = out[i].reshape(n, -1)[owned]
+        assert np.allclose(got, want[owned])
+
+
+def test_degraded_rank_traffic_reduced():
+    """Figure 5: the decomposition lowers the degraded rank's tx+rx."""
+    n = 8
+    prog_ring = ring_program(list(range(n)), n)
+    prog_r2, plan = build_r2ccl_all_reduce(list(range(n)), 3, x=0.5, g=8)
+    assert plan.use_r2ccl
+    d = 1e6
+    assert bottleneck_traffic(prog_r2, d, 3) < bottleneck_traffic(prog_ring, d, 3)
+
+
+def test_traffic_model_matches_executor():
+    """Analytic bytes_per_rank must equal the executor's measured traffic."""
+    n = 6
+    prog, _ = build_r2ccl_all_reduce(list(range(n)), 2, x=0.6, g=8)
+    size = 120
+    data = _data(n, size)
+    stats = ExecStats()
+    execute_program(prog, data, stats=stats)
+    model = prog.bytes_per_rank(size * 8.0)
+    for rank in range(n):
+        tx = stats.rank_tx.get(rank, 0.0)
+        assert tx == pytest.approx(model[rank]["tx"], rel=0.35), rank
+
+
+def test_inflight_failover_lossless():
+    """A link dying mid-round: the round replays (DMA rollback), result exact."""
+    n = 8
+    data = _data(n, 256)
+    sched = build_ring_all_reduce(list(range(n)), n)
+    stats = ExecStats()
+    out = execute_chunk_schedule(sched, data, stats=stats,
+                                 fail_at_round={3: (1, 2), 9: (5, 6)})
+    want = all_reduce_oracle(data)
+    assert stats.failovers == 2
+    for o in out:
+        assert np.allclose(o, want)
+
+
+# ---------------------------------------------------------------------------
+# Tree schedules (Table 1 latency path)
+# ---------------------------------------------------------------------------
+
+from repro.core.schedule import (  # noqa: E402
+    build_tree_all_reduce,
+    build_tree_broadcast,
+    build_tree_reduce,
+    tree_program,
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 16), root=st.integers(0, 15), size=st.integers(1, 64),
+       seed=st.integers(0, 50))
+def test_tree_allreduce_correct(n, root, size, seed):
+    root = root % n
+    prog = tree_program(list(range(n)), n)
+    assert check_all_reduce(prog, _data(n, size, seed))
+    # explicit root variant
+    sched = build_tree_all_reduce(list(range(n)), n, root=root)
+    out = execute_chunk_schedule(sched, _data(n, size, seed))
+    want = all_reduce_oracle(_data(n, size, seed))
+    for o in out:
+        assert np.allclose(o, want)
+
+
+@given(n=st.integers(2, 16))
+def test_tree_depth_logarithmic(n):
+    import math
+    sched = build_tree_all_reduce(list(range(n)), n)
+    assert len(sched.steps) == 2 * math.ceil(math.log2(n))
+
+
+@given(n=st.integers(2, 12), root=st.integers(0, 11))
+def test_tree_reduce_only_root(n, root):
+    root = root % n
+    data = _data(n, 16)
+    sched = build_tree_reduce(list(range(n)), n, root)
+    out = execute_chunk_schedule(sched, data)
+    assert np.allclose(out[root], all_reduce_oracle(data))
