@@ -9,6 +9,7 @@ experiments/bench/.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -26,12 +27,18 @@ BENCHES = [
 ]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
     ap.add_argument("--fast", action="store_true",
                     help="reduce Monte Carlo trials")
-    args = ap.parse_args()
+    ap.add_argument("--sim-mode", default="alpha_beta",
+                    choices=("alpha_beta", "event"),
+                    help="simulator backend for benches that support it "
+                         "(event = discrete-event schedule execution)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="<=8 simulated GPUs per bench (CI smoke scale)")
+    args = ap.parse_args(argv)
 
     print("benchmark,metric,value,derived")
     failures = []
@@ -41,10 +48,15 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(f"benchmarks.{module}", fromlist=["run"])
-            if name == "multi_failure" and args.fast:
-                mod.run(trials=10)
-            else:
-                mod.run()
+            accepted = inspect.signature(mod.run).parameters
+            kw = {}
+            if "mode" in accepted:
+                kw["mode"] = args.sim_mode
+            if "tiny" in accepted:
+                kw["tiny"] = args.tiny
+            if "trials" in accepted and args.fast:
+                kw["trials"] = 10
+            mod.run(**kw)
             print(f"# {name} ({desc}) done in {time.time()-t0:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001

@@ -1,0 +1,19 @@
+#!/usr/bin/env bash
+# Tier-1 test entry point: fast suite (minutes, not tens of minutes).
+#
+#   scripts/test.sh              # default: skip @slow (model/system/multidevice)
+#   scripts/test.sh --all        # everything, including @slow
+#   scripts/test.sh <pytest args...>   # passed through verbatim
+#
+# Property tests run offline via tests/_propcheck.py when hypothesis is not
+# installed; install requirements-dev.txt to use the real library.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--all" ]]; then
+    shift
+    exec python -m pytest -q "$@"
+fi
+exec python -m pytest -q -m "not slow" "$@"

@@ -15,13 +15,17 @@ The paper's contribution as a composable library:
   schedule     — collective schedule IR + ring builders
   executor_np  — numpy rank-parallel oracle executor
   collectives  — JAX shard_map/ppermute execution (the data plane)
-  comm_sim     — alpha-beta cluster simulator (SimAI-lite) for evaluation
+  event_sim    — discrete-event cluster simulator (per-link fair sharing,
+                 timestamped failure injection, rollback accounting)
+  comm_sim     — alpha-beta cluster simulator (SimAI-lite) for evaluation,
+                 with mode="event" delegating to event_sim
 """
 
 from . import (  # noqa: F401
     allreduce,
     balance,
     detection,
+    event_sim,
     executor_np,
     failures,
     migration,
@@ -32,6 +36,7 @@ from . import (  # noqa: F401
     schedule,
     topology,
 )
+from .event_sim import EventSimReport, simulate_program, simulate_schedule  # noqa: F401
 from .failures import Failure, FailureState, FailureType  # noqa: F401
 from .planner import CommConfig, Planner, Strategy  # noqa: F401
 

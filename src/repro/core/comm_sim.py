@@ -31,9 +31,17 @@ from .partition import (
     ring_coeff,
 )
 from .planner import Collective, Plan, Planner, Strategy
+from .recursive import build_recursive_all_reduce
 from .recursive import predict_time as recursive_predict_time
 from .recursive import spectrum_levels
 from .topology import ClusterTopology, DEFAULT_ALPHA
+
+#: simulator backends for the iteration/inference models:
+#:   "alpha_beta" — closed-form rates (fast; steady-state only);
+#:   "event"      — discrete-event execution of the real collective
+#:                  schedules (core.event_sim): contention, stragglers and
+#:                  mid-collective failures are simulated, not predicted.
+SIM_MODES = ("alpha_beta", "event")
 
 # --- hardware constants for the paper's testbed (H100 + CX7) ---------------
 H100_BF16_FLOPS = 989e12
@@ -175,6 +183,150 @@ def _ring_ar_time(payload: float, node_bw: Sequence[float], n_nodes: int, g: int
     return 2 * (n_nodes * g - 1) * alpha + ring_coeff(n_nodes * g) * payload / bmin
 
 
+# ---------------------------------------------------------------------------
+# Discrete-event backend (mode="event")
+# ---------------------------------------------------------------------------
+
+def _strategy_program(
+    strategy: str,
+    cluster: ClusterTopology,
+    state: FailureState,
+    *,
+    g: int,
+):
+    """The CollectiveProgram a strategy actually runs under ``state``.
+
+    Ranks are nodes.  Single dispatch site for every event-mode entry point
+    (iteration_time and event_failure_scenario), so strategy eligibility
+    rules (r2ccl needs exactly one degraded node and n >= 3, recursive
+    needs a spectrum) cannot diverge between them.  The R2CCL/recursive
+    paths emit the *real* decomposed schedules, so stage overlap and
+    stragglers come out of the simulation rather than a formula.
+    """
+    from .allreduce import build_r2ccl_all_reduce
+    from .schedule import ring_program
+
+    n = cluster.num_nodes
+    degraded = state.degraded_nodes()
+    order = list(range(n))
+
+    if strategy in ("ring", "balance", "hot_repair") or not degraded:
+        return ring_program(order, n)
+    if strategy == "r2ccl":
+        lost = cluster.lost_fractions(state.failed_nics)
+        worst = max(range(n), key=lambda i: lost[i])
+        if len(degraded) > 1 or n < 3:
+            return ring_program(order, n)
+        prog, _plan = build_r2ccl_all_reduce(order, worst, x=lost[worst], g=g)
+        return prog
+    if strategy == "recursive":
+        # level structure depends only on bandwidth *ratios*, so raw node
+        # bandwidths and channel-scaled capacities give the same program
+        prog, _levels = build_recursive_all_reduce(
+            cluster.bandwidths(state.failed_nics),
+            rail_sets=cluster.rail_sets(state.failed_nics), g=g)
+        return prog
+    raise ValueError(strategy)
+
+
+def _strategy_capacities(
+    strategy: str,
+    cluster: ClusterTopology,
+    state: FailureState,
+    *,
+    chan_bw_healthy: float,
+    detour_eff: float = DETOUR_EFFICIENCY,
+) -> list[float]:
+    """Per-node channel capacity under the strategy's NIC-level behavior."""
+    n = cluster.num_nodes
+    lost = cluster.lost_fractions(state.failed_nics)
+    degraded = set(state.degraded_nodes())
+    residual = [chan_bw_healthy * (1.0 - lost[i]) for i in range(n)]
+    if strategy == "balance":
+        return [r * detour_eff if i in degraded else r
+                for i, r in enumerate(residual)]
+    if strategy == "hot_repair":
+        # the orphaned channel doubles one backup NIC: the node's collective
+        # channel runs at half pace regardless of how much bandwidth is left
+        return [chan_bw_healthy * 0.5 if i in degraded else r
+                for i, r in enumerate(residual)]
+    return residual
+
+
+def event_dp_comm_time(
+    job: TrainJob,
+    cluster: ClusterTopology,
+    state: FailureState,
+    strategy: str,
+    *,
+    alpha: float = DEFAULT_ALPHA,
+) -> float:
+    """DP gradient AllReduce time by *executing* the collective schedule on
+    the discrete-event engine (mode="event" backend of iteration_time)."""
+    from .event_sim import simulate_program
+
+    g = cluster.devices_per_node
+    healthy_bw = max(cluster.bandwidths(())) if cluster.num_nodes else 0.0
+    chan_bw = healthy_bw / g * min(job.nic_stripe, g)
+    prog = _strategy_program(strategy, cluster, state, g=g)
+    caps = _strategy_capacities(strategy, cluster, state,
+                                chan_bw_healthy=chan_bw)
+    report = simulate_program(prog, job.dp_allreduce_bytes(),
+                              capacities=caps, g=g, alpha=alpha)
+    return report.completion_time
+
+
+def event_failure_scenario(
+    cluster: ClusterTopology,
+    payload_bytes: float,
+    failures: Sequence[Failure] = (),
+    *,
+    strategy: str = "ring",            # ring|r2ccl|recursive
+    alpha: float = DEFAULT_ALPHA,
+    rank_data=None,
+    healthy_time: float | None = None,  # precomputed healthy-ring baseline
+) -> dict[str, float]:
+    """One collective under timed failure injection, fully simulated.
+
+    The schedule is planned against what the control plane knows at t=0
+    (failures with ``at_time <= 0``); failures with a later ``at_time``
+    strike *mid-collective* and exercise the rollback/retransmit path the
+    alpha-beta model cannot express.  Returns completion time, overhead vs
+    the healthy ring, retransmitted bytes, failover count, and the
+    utilization spread across nodes.
+    """
+    from .event_sim import simulate_program
+    from .schedule import ring_program
+
+    n = cluster.num_nodes
+    g = cluster.devices_per_node
+    order = list(range(n))
+    pre = FailureState()
+    for f in failures:
+        if f.at_time <= 0.0 and f.severity >= 1.0:
+            pre.apply(f)
+
+    prog = _strategy_program(strategy, cluster, pre, g=g)
+    report = simulate_program(prog, payload_bytes, cluster=cluster,
+                              alpha=alpha, failures=failures,
+                              rank_data=rank_data)
+    if healthy_time is None:
+        healthy_time = simulate_program(
+            ring_program(order, n), payload_bytes, cluster=cluster,
+            alpha=alpha).completion_time
+    util = list(report.link_utilization.values())
+    return {
+        "completion_time": report.completion_time,
+        "healthy_time": healthy_time,
+        "overhead": report.completion_time / healthy_time - 1.0,
+        "retransmitted_bytes": report.retransmitted_bytes,
+        "failovers": float(report.failovers),
+        "util_min": min(util) if util else 0.0,
+        "util_max": max(util) if util else 0.0,
+        "transfers": float(report.transfers),
+    }
+
+
 def iteration_time(
     job: TrainJob,
     cluster: ClusterTopology,
@@ -183,6 +335,7 @@ def iteration_time(
     strategy: str = "auto",            # auto|ring|hot_repair|balance|r2ccl|recursive
     overlap_fraction: float = 0.0,     # DP comm overlapped with backward
     overlapped_broadcast: bool = True, # r2ccl stage-2 overlap (beyond-paper)
+    mode: str = "alpha_beta",          # SIM_MODES: alpha_beta | event
 ) -> IterationBreakdown:
     """One training iteration under the given failure state + strategy.
 
@@ -191,7 +344,15 @@ def iteration_time(
     Ring channels are rail-aligned: each DP rank's ring rides its own NIC,
     so the per-rank channel bandwidth is node_bw / g and a failed NIC
     degrades the whole node's aggregate (the paper's setting).
+
+    ``mode="event"`` replaces the closed-form DP-AllReduce rate with a
+    discrete-event execution of the strategy's real schedule (ranks =
+    nodes, so the ring coefficient is 2(n-1)/n instead of the alpha-beta
+    2(ng-1)/ng — compare within one mode, not across).  TP/PP terms stay
+    analytic in both modes (they are intra-node / point-to-point).
     """
+    if mode not in SIM_MODES:
+        raise ValueError(f"mode must be one of {SIM_MODES}, got {mode!r}")
     g = cluster.devices_per_node
     n = cluster.num_nodes
     bw = cluster.bandwidths(state.failed_nics)
@@ -222,7 +383,9 @@ def iteration_time(
     else:
         strat = strategy
 
-    if not degraded:
+    if mode == "event":
+        dp_comm = event_dp_comm_time(job, cluster, state, strat)
+    elif not degraded:
         dp_comm = healthy_dp_comm
     elif strat == "recursive":
         rate = strategy_rate("recursive", healthy_bw, x_worst, n_nodes=n, g=g,
@@ -255,13 +418,20 @@ def training_overhead(
     cluster: ClusterTopology,
     failures: Sequence[Failure],
     strategy: str = "auto",
+    *,
+    mode: str = "alpha_beta",
 ) -> float:
-    """Relative iteration-time overhead vs the no-failure baseline."""
-    healthy = iteration_time(job, cluster, FailureState(), strategy="ring")
+    """Relative iteration-time overhead vs the no-failure baseline.
+
+    Healthy baseline and degraded iteration use the same simulator
+    ``mode`` so the ratio is internally consistent.
+    """
+    healthy = iteration_time(job, cluster, FailureState(), strategy="ring",
+                             mode=mode)
     st = FailureState()
     for f in failures:
         st.apply(f)
-    failed = iteration_time(job, cluster, st, strategy=strategy)
+    failed = iteration_time(job, cluster, st, strategy=strategy, mode=mode)
     return failed.total / healthy.total - 1.0
 
 
@@ -297,6 +467,7 @@ def monte_carlo_multi_failure(
     trials: int = 50,
     seed: int = 0,
     strategy: str = "auto",
+    mode: str = "alpha_beta",
 ) -> dict[str, float]:
     """Paper Fig. 10: average overhead across random k-failure patterns."""
     from .failures import random_failures
@@ -305,7 +476,8 @@ def monte_carlo_multi_failure(
     for t in range(trials):
         fs = random_failures(k_failures, cluster.num_nodes,
                              cluster.devices_per_node, seed=seed * 1000 + t)
-        overheads.append(training_overhead(job, cluster, fs, strategy=strategy))
+        overheads.append(training_overhead(job, cluster, fs, strategy=strategy,
+                                           mode=mode))
     overheads.sort()
     return {
         "mean": sum(overheads) / len(overheads),

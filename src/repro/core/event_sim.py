@@ -1,0 +1,571 @@
+"""Discrete-event cluster simulator executing real collective schedules.
+
+The alpha-beta model in :mod:`core.comm_sim` predicts a collective's time
+from a closed-form formula; it cannot represent mid-collective failures,
+contention between concurrent transfers, or straggler dynamics.  This
+module is the SimAI-style counterpart: an absolute-time event engine that
+*executes* the actual :class:`core.schedule.CollectiveProgram` emitted by
+``recursive.py`` / ``planner.py`` / ``allreduce.py`` — the same IR the
+numpy oracle and the JAX backend run — transfer by transfer.
+
+Model
+-----
+* Each program rank is a node with full-duplex egress/ingress capacity
+  (the sum of its healthy NICs, or an explicit per-rank capacity).
+* All transfers concurrently in flight share bandwidth by **max-min
+  fairness** subject to per-rank tx and rx capacities (progressive
+  filling), recomputed at every event — the flow-level network model used
+  by SimAI's analytical backend.
+* A transfer of step ``i`` is released once both its endpoints finished
+  their transfers of their previous participating step (per-rank lockstep;
+  no global barrier).  Segments of a program run concurrently and compete
+  for bandwidth, so the stage-overlap of the R2CCL decomposition *emerges*
+  instead of being assumed.
+* Each released transfer pays the per-hop latency ``alpha``, then streams
+  its bytes at the fair-share rate.
+* Failures are injected at absolute simulated timestamps from
+  :class:`core.failures.Failure`: a hard NIC/link failure removes that
+  NIC's bandwidth and **rolls back** every in-flight transfer riding it
+  (chunk-granularity DMA rollback — bytes already streamed are counted as
+  retransmitted and the transfer restarts after ``repair_latency``); a
+  ``recovers_at`` timestamp restores the bandwidth (link flap); a
+  fractional ``severity`` (slow NIC) only rescales bandwidth and triggers
+  no rollback.
+* When ``rank_data`` is given the engine also moves real numpy payloads
+  (snapshot at transfer start, write/accumulate at completion), so
+  conservation under failure is *checked*, not presumed.
+
+The engine reports per-collective completion time, per-link bytes,
+per-rank egress utilization, and retransmitted bytes after failover.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .failures import Failure, OUT_OF_SCOPE
+from .schedule import ChunkSchedule, CollectiveProgram
+from .topology import ClusterTopology, DEFAULT_ALPHA
+
+#: restart delay after a rollback (matches the paper's low-millisecond
+#: hot-repair figure; see core.migration.migration_latency for the breakdown)
+DEFAULT_REPAIR_LATENCY = 1.5e-3
+
+_BLOCKED, _LATENT, _ACTIVE, _DONE = range(4)
+
+
+class EventSimError(RuntimeError):
+    pass
+
+
+class StalledError(EventSimError):
+    """No transfer can make progress and no future event can unblock one."""
+
+
+@dataclasses.dataclass
+class _Transfer:
+    tid: int
+    seg: int
+    step: int
+    src: int
+    dst: int
+    size: float                  # bytes
+    accumulate: bool
+    whole_buffer: bool
+    send_chunk: int
+    recv_chunk: int
+    deps: int = 0                # unfinished prerequisite transfers
+    state: int = _BLOCKED
+    remaining: float = 0.0
+    payload: np.ndarray | None = None
+    dependents: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class EventSimReport:
+    """What one simulated collective did."""
+
+    completion_time: float
+    #: absolute finish time of each segment's last transfer
+    segment_finish: list[float]
+    #: bytes moved per directed (src, dst) rank pair, retransmissions included
+    link_bytes: dict[tuple[int, int], float]
+    rank_tx_bytes: dict[int, float]
+    rank_rx_bytes: dict[int, float]
+    #: egress busy fraction per rank: bytes sent / (healthy capacity * makespan)
+    link_utilization: dict[int, float]
+    retransmitted_bytes: float
+    failovers: int
+    transfers: int
+    events: int
+    #: final per-rank buffers when ``rank_data`` was supplied, else None
+    rank_data: list[np.ndarray] | None = None
+
+
+# ---------------------------------------------------------------------------
+# capacity bookkeeping
+# ---------------------------------------------------------------------------
+
+class _Capacities:
+    """Per-rank egress/ingress capacity under timed NIC-level degradation."""
+
+    def __init__(self, base: Sequence[float], rail_bw: Sequence[Sequence[float]]):
+        self.base = list(base)
+        self.rail_bw = [list(r) for r in rail_bw]          # per rank, per rail
+        # active degradations keyed by the *failure event itself* so a
+        # flap's recovery can never resurrect a rail a different failure
+        # killed: per rank, failure -> (rail, severity)
+        self._lost: list[dict[Failure, tuple[int, float]]] = [{} for _ in base]
+
+    @classmethod
+    def from_cluster(cls, cluster: ClusterTopology) -> "_Capacities":
+        return cls(cluster.bandwidths(), cluster.rail_bandwidths())
+
+    @classmethod
+    def uniform(cls, capacities: Sequence[float], g: int) -> "_Capacities":
+        rails = [[c / g] * g for c in capacities]
+        return cls(capacities, rails)
+
+    def num_rails(self, rank: int) -> int:
+        return len(self.rail_bw[rank])
+
+    def fail(self, rank: int, failure: Failure) -> None:
+        self._lost[rank][failure] = (failure.rail, failure.severity)
+
+    def recover(self, rank: int, failure: Failure) -> None:
+        self._lost[rank].pop(failure, None)
+
+    def capacity(self, rank: int) -> float:
+        # a rail's loss is the worst active degradation on it (a dead NIC is
+        # dead; a concurrent slow-NIC event on the same rail adds nothing)
+        worst: dict[int, float] = {}
+        for rail, sev in self._lost[rank].values():
+            worst[rail] = max(worst.get(rail, 0.0), sev)
+        lost = sum(self.rail_bw[rank][rail] * sev for rail, sev in worst.items())
+        return max(0.0, self.base[rank] - lost)
+
+
+def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
+    """Max-min fair rates under per-rank tx and rx capacity (water-filling)."""
+    rates: dict[int, float] = {}
+    remaining = list(flows)
+    avail: dict[tuple[str, int], float] = {}
+    for f in remaining:
+        avail.setdefault(("tx", f.src), cap(f.src))
+        avail.setdefault(("rx", f.dst), cap(f.dst))
+    while remaining:
+        counts: dict[tuple[str, int], int] = {}
+        for f in remaining:
+            counts[("tx", f.src)] = counts.get(("tx", f.src), 0) + 1
+            counts[("rx", f.dst)] = counts.get(("rx", f.dst), 0) + 1
+        bottleneck = min(counts, key=lambda k: avail[k] / counts[k])
+        share = max(0.0, avail[bottleneck] / counts[bottleneck])
+        frozen = [f for f in remaining
+                  if (bottleneck[0] == "tx" and f.src == bottleneck[1])
+                  or (bottleneck[0] == "rx" and f.dst == bottleneck[1])]
+        for f in frozen:
+            rates[f.tid] = share
+            avail[("tx", f.src)] -= share
+            avail[("rx", f.dst)] -= share
+        remaining = [f for f in remaining if f.tid not in rates]
+    return rates
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class EventSimulator:
+    """One collective program, executed on an absolute-time event queue."""
+
+    def __init__(
+        self,
+        prog: CollectiveProgram,
+        total_bytes: float,
+        *,
+        cluster: ClusterTopology | None = None,
+        capacities: Sequence[float] | None = None,
+        g: int = 8,
+        alpha: float = DEFAULT_ALPHA,
+        failures: Sequence[Failure] = (),
+        rank_data: Sequence[np.ndarray] | None = None,
+        repair_latency: float = DEFAULT_REPAIR_LATENCY,
+    ):
+        prog.validate()
+        self.prog = prog
+        self.total_bytes = float(total_bytes)
+        self.alpha = alpha
+        self.repair_latency = repair_latency
+        if cluster is not None:
+            if cluster.num_nodes != prog.n:
+                raise EventSimError(
+                    f"program has {prog.n} ranks but cluster has "
+                    f"{cluster.num_nodes} nodes")
+            self.caps = _Capacities.from_cluster(cluster)
+        elif capacities is not None:
+            if len(capacities) != prog.n:
+                raise EventSimError("capacities must have one entry per rank")
+            self.caps = _Capacities.uniform(capacities, g)
+        else:
+            raise EventSimError("need either cluster= or capacities=")
+        self.healthy_caps = [self.caps.capacity(r) for r in range(prog.n)]
+
+        self.transfers: list[_Transfer] = []
+        self._seg_last_tid: list[int] = []
+        self._build_transfers()
+        self._wire_dependencies()
+        self._init_data(rank_data)
+
+        # event queue: (time, seq, kind, arg)
+        self._events: list[tuple[float, int, str, object]] = []
+        self._seq = 0
+        for f in failures:
+            # NIC-level events only: hard failures R2CCL can see (supported /
+            # escalated) or fractional degradations (slow NIC).  Out-of-scope
+            # types (switch outage, process crash) are not transport events,
+            # whatever their severity.
+            if f.ftype in OUT_OF_SCOPE:
+                continue
+            if not (f.supported or f.severity < 1.0):
+                continue
+            if not 0 <= f.node < prog.n:
+                raise EventSimError(
+                    f"failure targets node {f.node} but the program has "
+                    f"ranks 0..{prog.n - 1}: {f}")
+            if not 0 <= f.rail < self.caps.num_rails(f.node):
+                raise EventSimError(
+                    f"failure targets rail {f.rail} but node {f.node} has "
+                    f"rails 0..{self.caps.num_rails(f.node) - 1}: {f}")
+            self._push(f.at_time, "fail", f)
+            if f.recovers_at is not None:
+                self._push(f.recovers_at, "recover", f)
+
+        self._active: set[int] = set()
+        self.link_bytes: dict[tuple[int, int], float] = {}
+        self.rank_tx: dict[int, float] = {r: 0.0 for r in range(prog.n)}
+        self.rank_rx: dict[int, float] = {r: 0.0 for r in range(prog.n)}
+        self.retransmitted_bytes = 0.0
+        self.failovers = 0
+        self.events_processed = 0
+        self.segment_finish = [0.0] * len(prog.segments)
+
+    # -- construction --------------------------------------------------------
+    def _push(self, t: float, kind: str, arg: object) -> None:
+        heapq.heappush(self._events, (t, self._seq, kind, arg))
+        self._seq += 1
+
+    def _build_transfers(self) -> None:
+        for si, seg in enumerate(self.prog.segments):
+            sched = seg.schedule
+            seg_bytes = self.total_bytes * seg.frac
+            chunk_bytes = seg_bytes / sched.num_chunks
+            for step_i, st in enumerate(sched.steps):
+                size = seg_bytes if st.whole_buffer else chunk_bytes
+                for src, dst in st.perm:
+                    self.transfers.append(_Transfer(
+                        tid=len(self.transfers), seg=si, step=step_i,
+                        src=src, dst=dst, size=size,
+                        accumulate=st.accumulate,
+                        whole_buffer=st.whole_buffer,
+                        send_chunk=st.send_chunk[src],
+                        recv_chunk=st.recv_chunk[dst],
+                    ))
+
+    def _wire_dependencies(self) -> None:
+        """Transfer (seg, step i, {s,d}) waits on all transfers of s's and
+        d's previous participating step in the same segment."""
+        by_seg_step_rank: dict[tuple[int, int, int], list[_Transfer]] = {}
+        for t in self.transfers:
+            for r in (t.src, t.dst):
+                by_seg_step_rank.setdefault((t.seg, t.step, r), []).append(t)
+        for si, seg in enumerate(self.prog.segments):
+            rank_steps = seg.schedule.rank_steps()
+            for t in self.transfers:
+                if t.seg != si:
+                    continue
+                prereqs: set[int] = set()
+                for r in {t.src, t.dst}:
+                    steps = rank_steps[r]
+                    pos = steps.index(t.step)
+                    if pos > 0:
+                        prev = steps[pos - 1]
+                        for p in by_seg_step_rank.get((si, prev, r), []):
+                            prereqs.add(p.tid)
+                prereqs.discard(t.tid)
+                t.deps = len(prereqs)
+                for p in prereqs:
+                    self.transfers[p].dependents.append(t.tid)
+
+    def _init_data(self, rank_data: Sequence[np.ndarray] | None) -> None:
+        """Per-rank, per-segment chunked float64 buffers (as executor_np)."""
+        self._data = None
+        if rank_data is None:
+            return
+        n = self.prog.n
+        assert len(rank_data) == n
+        data = [np.asarray(d, dtype=np.float64) for d in rank_data]
+        total = data[0].shape[-1]
+        self._orig_total = total
+        # segment boundaries mirror executor_np.execute_program
+        bounds = []
+        start = 0
+        for i, seg in enumerate(self.prog.segments):
+            end = total if i == len(self.prog.segments) - 1 else \
+                start + int(round(seg.frac * total))
+            bounds.append((start, end))
+            start = end
+        self._seg_bounds = bounds
+        self._data = []           # [seg][rank] -> (chunked buffer, orig_len)
+        for si, seg in enumerate(self.prog.segments):
+            s, e = bounds[si]
+            nc = seg.schedule.num_chunks
+            bufs = []
+            orig = e - s
+            for r in range(n):
+                b = data[r][s:e]
+                pad = (-orig) % nc
+                if pad:
+                    b = np.concatenate([b, np.zeros(pad, np.float64)])
+                bufs.append(b.reshape(nc, -1).copy())
+            self._data.append((bufs, orig))
+
+    # -- data plane ----------------------------------------------------------
+    def _snapshot(self, t: _Transfer) -> None:
+        if self._data is None:
+            return
+        bufs, _ = self._data[t.seg]
+        src_buf = bufs[t.src]
+        t.payload = src_buf.copy() if t.whole_buffer else src_buf[t.send_chunk].copy()
+
+    def _deliver(self, t: _Transfer) -> None:
+        if self._data is None or t.payload is None:
+            return
+        bufs, _ = self._data[t.seg]
+        if t.whole_buffer:
+            bufs[t.dst] = bufs[t.dst] + t.payload if t.accumulate \
+                else t.payload.copy()
+        else:
+            c = t.recv_chunk
+            if t.accumulate:
+                bufs[t.dst][c] = bufs[t.dst][c] + t.payload
+            else:
+                bufs[t.dst][c] = t.payload
+        t.payload = None
+
+    def _final_data(self) -> list[np.ndarray] | None:
+        if self._data is None:
+            return None
+        n = self.prog.n
+        out = [np.empty(self._orig_total, np.float64) for _ in range(n)]
+        for si in range(len(self.prog.segments)):
+            s, e = self._seg_bounds[si]
+            bufs, orig = self._data[si]
+            for r in range(n):
+                out[r][s:e] = bufs[r].reshape(-1)[:orig]
+        return out
+
+    # -- scheduling ----------------------------------------------------------
+    def _release(self, now: float, t: _Transfer, extra_delay: float = 0.0) -> None:
+        t.state = _LATENT
+        self._push(now + self.alpha + extra_delay, "activate", t.tid)
+
+    def _activate(self, now: float, t: _Transfer) -> None:
+        t.state = _ACTIVE
+        t.remaining = t.size
+        self._active.add(t.tid)
+        self._snapshot(t)
+
+    def _complete(self, now: float, t: _Transfer) -> None:
+        t.state = _DONE
+        t.remaining = 0.0
+        self._active.discard(t.tid)
+        self._deliver(t)
+        e = (t.src, t.dst)
+        self.link_bytes[e] = self.link_bytes.get(e, 0.0) + t.size
+        self.rank_tx[t.src] += t.size
+        self.rank_rx[t.dst] += t.size
+        self.segment_finish[t.seg] = max(self.segment_finish[t.seg], now)
+        for d in t.dependents:
+            dep = self.transfers[d]
+            dep.deps -= 1
+            if dep.deps == 0 and dep.state == _BLOCKED:
+                self._release(now, dep)
+
+    def _rollback(self, now: float, t: _Transfer) -> None:
+        """DMA rollback: bytes already streamed are retransmitted; the
+        transfer restarts (on a healthy rail) after the repair latency."""
+        sent = t.size - t.remaining
+        self.retransmitted_bytes += sent
+        self.rank_tx[t.src] += sent          # wasted egress really happened
+        e = (t.src, t.dst)
+        self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
+        self.failovers += 1
+        t.payload = None
+        t.state = _LATENT
+        self._active.discard(t.tid)
+        self._push(now + self.repair_latency + self.alpha, "activate", t.tid)
+
+    def _apply_failure(self, now: float, f: Failure, recovering: bool) -> None:
+        rank = f.node
+        if recovering:
+            self.caps.recover(rank, f)
+            return
+        self.caps.fail(rank, f)
+        if f.severity < 1.0 or not f.escalates:
+            return                      # degradation only — nothing in flight dies
+        # A hard NIC death interrupts the node's striped channels: every
+        # in-flight transfer touching the node rewinds to its last completed
+        # chunk (DMA rollback) and restarts after the hot-repair latency.
+        for tid in sorted(self._active):
+            t = self.transfers[tid]
+            if t.src == rank or t.dst == rank:
+                self._rollback(now, t)
+
+    # -- main loop -----------------------------------------------------------
+    def run(self) -> EventSimReport:
+        now = 0.0
+        # release all transfers with no prerequisites
+        for t in self.transfers:
+            if t.deps == 0:
+                self._release(now, t)
+
+        remaining_transfers = len(self.transfers)
+        guard = 0
+        max_iters = 50 * len(self.transfers) + 10_000
+        while remaining_transfers > 0:
+            guard += 1
+            if guard > max_iters:
+                raise EventSimError("event loop not converging")
+            active = [self.transfers[i] for i in sorted(self._active)]
+            rates = _fair_share(active, self.caps.capacity) if active else {}
+
+            # earliest completion among active flows (size-relative epsilon:
+            # float residue in `remaining` must not stall the clock)
+            def eps(t: _Transfer) -> float:
+                return max(1e-9, 1e-9 * t.size)
+
+            t_complete = math.inf
+            for t in active:
+                r = rates.get(t.tid, 0.0)
+                if r > 0 or t.size <= 0:
+                    t_complete = min(
+                        t_complete,
+                        now + (0.0 if t.remaining <= eps(t)
+                               else t.remaining / r))
+            t_event = self._events[0][0] if self._events else math.inf
+            t_next = min(t_complete, t_event)
+            if math.isinf(t_next):
+                stalled = [t.tid for t in active]
+                blocked = [t.tid for t in self.transfers
+                           if t.state in (_BLOCKED, _LATENT)]
+                raise StalledError(
+                    f"simulation stalled at t={now:.6g}s: active={stalled} "
+                    f"have zero bandwidth and no future recovery event "
+                    f"(blocked/latent: {len(blocked)})")
+
+            # stream bytes until t_next
+            dt = t_next - now
+            if dt > 0:
+                for t in active:
+                    drained = rates.get(t.tid, 0.0) * dt
+                    t.remaining = max(0.0, t.remaining - drained)
+            now = t_next
+
+            # completions strictly before/at events at the same timestamp:
+            # finish flows first so dependents can react to the event epoch
+            completed = [t for t in active
+                         if t.remaining <= eps(t)
+                         and (rates.get(t.tid, 0.0) > 0 or t.size <= 0)]
+            for t in completed:
+                self._complete(now, t)
+                remaining_transfers -= 1
+                self.events_processed += 1
+
+            while self._events and self._events[0][0] <= now + 1e-15:
+                _, _, kind, arg = heapq.heappop(self._events)
+                self.events_processed += 1
+                if kind == "activate":
+                    t = self.transfers[arg]
+                    if t.state == _LATENT:
+                        self._activate(now, t)
+                elif kind == "fail":
+                    self._apply_failure(now, arg, recovering=False)
+                elif kind == "recover":
+                    self._apply_failure(now, arg, recovering=True)
+
+        makespan = now
+        util = {}
+        for r in range(self.prog.n):
+            denom = self.healthy_caps[r] * makespan
+            util[r] = (self.rank_tx[r] / denom) if denom > 0 else 0.0
+        return EventSimReport(
+            completion_time=makespan,
+            segment_finish=list(self.segment_finish),
+            link_bytes=dict(self.link_bytes),
+            rank_tx_bytes=dict(self.rank_tx),
+            rank_rx_bytes=dict(self.rank_rx),
+            link_utilization=util,
+            retransmitted_bytes=self.retransmitted_bytes,
+            failovers=self.failovers,
+            transfers=len(self.transfers),
+            events=self.events_processed,
+            rank_data=self._final_data(),
+        )
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def simulate_program(
+    prog: CollectiveProgram,
+    total_bytes: float,
+    *,
+    cluster: ClusterTopology | None = None,
+    capacities: Sequence[float] | None = None,
+    g: int = 8,
+    alpha: float = DEFAULT_ALPHA,
+    failures: Sequence[Failure] = (),
+    rank_data: Sequence[np.ndarray] | None = None,
+    repair_latency: float = DEFAULT_REPAIR_LATENCY,
+) -> EventSimReport:
+    """Execute ``prog`` on the discrete-event engine.
+
+    Exactly one of ``cluster`` (rank i = node i, capacity = node egress)
+    or ``capacities`` (explicit per-rank bytes/s, split over ``g`` equal
+    rails for failure mapping) must be given.  ``failures`` are applied at
+    their ``at_time`` timestamps; fractional ``severity`` rescales
+    bandwidth only, full severity also rolls back in-flight transfers on
+    the failed rail.
+    """
+    return EventSimulator(
+        prog, total_bytes, cluster=cluster, capacities=capacities, g=g,
+        alpha=alpha, failures=failures, rank_data=rank_data,
+        repair_latency=repair_latency,
+    ).run()
+
+
+def simulate_schedule(
+    sched: ChunkSchedule,
+    total_bytes: float,
+    **kw,
+) -> EventSimReport:
+    """Convenience wrapper for a single-segment schedule."""
+    from .schedule import CollectiveProgram, Segment
+
+    prog = CollectiveProgram(sched.name, sched.n, [Segment(1.0, sched)])
+    return simulate_program(prog, total_bytes, **kw)
+
+
+def predict_ring_all_reduce(n: int, payload: float, bandwidth: float,
+                            alpha: float = DEFAULT_ALPHA) -> float:
+    """The closed-form healthy baseline the event engine must reproduce:
+    2(n-1) rounds of (alpha + (payload/n)/B)."""
+    from .partition import ring_coeff
+
+    return 2 * (n - 1) * alpha + ring_coeff(n) * payload / bandwidth

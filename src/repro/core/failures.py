@@ -24,6 +24,7 @@ class FailureType(enum.Enum):
     NIC_FIRMWARE = "nic_firmware"          # supported
     PCIE = "pcie"                          # partial: subset of NICs
     GPU_NIC_PATH = "gpu_nic_path"          # partial: GPUDirect degraded
+    SLOW_NIC = "slow_nic"                  # partial: degraded, not dead (spectrum)
     NVLINK = "nvlink"                      # out of scope
     SWITCH_OUTAGE = "switch_outage"        # out of scope
     PROCESS_CRASH = "process_crash"        # out of scope
@@ -43,6 +44,7 @@ PARTIAL = {
     FailureType.CRC_ERROR,
     FailureType.PCIE,
     FailureType.GPU_NIC_PATH,
+    FailureType.SLOW_NIC,
 }
 OUT_OF_SCOPE = {
     FailureType.NVLINK,
@@ -61,6 +63,11 @@ class Failure:
     at_time: float = 0.0            # seconds into the run (for injection)
     escalates: bool = True          # for PARTIAL types: does it surface a timeout?
     recovers_at: float | None = None
+    #: fraction of the NIC's bandwidth lost: 1.0 = fully dead (hard failures),
+    #: <1.0 = the paper's Section-6 bandwidth *spectrum* (slow NIC).  Only the
+    #: discrete-event simulator consumes fractional severities; the binary
+    #: ``FailureState`` treats any escalated failure as the NIC being down.
+    severity: float = 1.0
 
     @property
     def nic_key(self) -> tuple[int, int]:
@@ -135,3 +142,36 @@ def rail_mismatch_failures(node_a: int, node_b: int, rail_a: int, rail_b: int) -
         Failure(FailureType.NIC_HARDWARE, node_a, rail_a),
         Failure(FailureType.NIC_HARDWARE, node_b, rail_b),
     ]
+
+
+# ---------------------------------------------------------------------------
+# Timed injections for the discrete-event simulator (core.event_sim)
+# ---------------------------------------------------------------------------
+
+def nic_down_at(node: int, rail: int, at_time: float) -> Failure:
+    """Hard NIC failure at an absolute simulated timestamp."""
+    return Failure(FailureType.NIC_HARDWARE, node, rail, at_time=at_time)
+
+
+def link_flap(node: int, rail: int, at_time: float, down_for: float) -> Failure:
+    """Link goes down at ``at_time`` and recovers ``down_for`` seconds later
+    (the flapping pattern of paper Table 2, surfaced as a timeout)."""
+    return Failure(FailureType.LINK_FLAPPING, node, rail, at_time=at_time,
+                   escalates=True, recovers_at=at_time + down_for)
+
+
+def slow_nic(node: int, rail: int, at_time: float, lost_fraction: float) -> Failure:
+    """NIC degrades to ``1 - lost_fraction`` of its bandwidth but stays up —
+    one point of the Section-6 bandwidth spectrum.  Does not escalate to a
+    transport failure, so no rollback is triggered."""
+    assert 0.0 < lost_fraction < 1.0
+    return Failure(FailureType.SLOW_NIC, node, rail, at_time=at_time,
+                   escalates=False, severity=lost_fraction)
+
+
+def flap_sequence(node: int, rail: int, *, start: float, period: float,
+                  down_for: float, count: int) -> list[Failure]:
+    """``count`` flaps of the same link, ``period`` seconds apart."""
+    assert down_for < period
+    return [link_flap(node, rail, start + i * period, down_for)
+            for i in range(count)]

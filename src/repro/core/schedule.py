@@ -6,12 +6,15 @@ point-to-point transfers (disjoint sources/destinations — the shape of a
 single ``lax.ppermute``) over equal-size chunks of a flat buffer, optionally
 accumulating at the receiver.
 
-The same IR is executed by three backends:
+The same IR is executed by four backends:
   * ``core.executor_np``  — rank-parallel numpy oracle (correctness tests,
     traffic accounting, alpha-beta timing);
   * ``core.collectives``  — real JAX execution inside ``shard_map`` via
     ``lax.ppermute`` (training/serving data plane);
-  * ``core.comm_sim``     — alpha-beta discrete-event timing only.
+  * ``core.event_sim``    — discrete-event cluster simulation (per-link fair
+    sharing, mid-collective failure injection, rollback/retransmit);
+  * ``core.comm_sim``     — closed-form alpha-beta timing, with a
+    ``mode="event"`` switch that delegates to ``core.event_sim``.
 
 Builders for ring ReduceScatter / AllGather / AllReduce / Broadcast and the
 R2CCL decompositions live in ``core.allreduce`` and ``core.recursive``.
@@ -98,6 +101,26 @@ class ChunkSchedule:
 
     def num_rounds(self) -> int:
         return len(self.steps)
+
+    def step_participants(self) -> list[frozenset[int]]:
+        """Ranks touched (as src or dst) by each step, in step order."""
+        return [
+            frozenset(r for e in st.perm for r in e) for st in self.steps
+        ]
+
+    def rank_steps(self) -> dict[int, list[int]]:
+        """For every rank, the ordered step indices it participates in.
+
+        This is the dependency structure the discrete-event simulator uses:
+        a rank may engage in step ``i`` only once all its transfers in its
+        previous participating step completed (per-rank lockstep, no global
+        barrier — stragglers delay only the chains through them).
+        """
+        out: dict[int, list[int]] = {r: [] for r in range(self.n)}
+        for i, parts in enumerate(self.step_participants()):
+            for r in parts:
+                out[r].append(i)
+        return out
 
 
 @dataclasses.dataclass

@@ -155,6 +155,18 @@ class ClusterTopology:
     def bandwidths(self, failed: Iterable[tuple[int, int]] = ()) -> list[float]:
         return [self.node_bandwidth(i, failed) for i in range(self.num_nodes)]
 
+    def rail_bandwidths(self) -> list[list[float]]:
+        """Per-node list of per-rail (NIC) bandwidths, rail-indexed.
+
+        The discrete-event simulator uses this to map a timed
+        ``Failure(node, rail, severity)`` onto the exact bandwidth slice it
+        removes, including heterogeneous NICs within one node.
+        """
+        return [
+            [nic.bandwidth for nic in sorted(node.nics, key=lambda n: n.rail)]
+            for node in self.nodes
+        ]
+
     def lost_fractions(self, failed: Iterable[tuple[int, int]] = ()) -> list[float]:
         return [self.nodes[i].lost_fraction(failed) for i in range(self.num_nodes)]
 

@@ -1,0 +1,249 @@
+"""Minimal offline hypothesis-compatible shim.
+
+The container cannot ``pip install hypothesis``, which left 7 seed test
+modules failing at *collection*.  This module implements the exact subset
+of the hypothesis API those tests (and the event-sim property tests) use,
+backed by a seeded :mod:`random` generator so runs are deterministic per
+test.  ``conftest.py`` aliases it into ``sys.modules['hypothesis']`` only
+when the real hypothesis is absent — when hypothesis is installable, the
+real library is used unchanged.
+
+Supported surface:
+  * ``@given(**kwargs)`` with keyword strategies (the only form used here);
+  * ``@settings(max_examples=..., deadline=...)`` in either decorator order;
+  * ``assume(condition)`` — discards the current example and redraws;
+  * ``strategies``: ``integers``, ``floats``, ``booleans``, ``lists``,
+    ``sampled_from``, ``dictionaries``, ``just``, ``composite``, ``data``.
+
+No shrinking: on failure the falsifying example is attached to the
+exception message instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class UnsatisfiedAssumption(Exception):
+    """Raised by :func:`assume` to discard the current example."""
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise UnsatisfiedAssumption()
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+
+class SearchStrategy:
+    """A strategy draws a value from a ``random.Random``."""
+
+    def __init__(self, draw_fn, label: str = "strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def do_draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, f) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self._draw(rng)),
+                              f"{self._label}.map")
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rng: random.Random):
+            for _ in range(100):
+                v = self._draw(rng)
+                if pred(v):
+                    return v
+            raise UnsatisfiedAssumption()
+        return SearchStrategy(draw, f"{self._label}.filter")
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return self._label
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.randint(min_value, max_value),
+                          f"integers({min_value}, {max_value})")
+
+
+def floats(min_value: float, max_value: float, **_kw) -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.uniform(min_value, max_value),
+                          f"floats({min_value}, {max_value})")
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value, f"just({value!r})")
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements),
+                          f"sampled_from({elements!r})")
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int | None = None) -> SearchStrategy:
+    max_size = min_size + 10 if max_size is None else max_size
+
+    def draw(rng: random.Random):
+        k = rng.randint(min_size, max_size)
+        return [elements.do_draw(rng) for _ in range(k)]
+
+    return SearchStrategy(draw, "lists(...)")
+
+
+def dictionaries(keys: SearchStrategy, values: SearchStrategy, *,
+                 min_size: int = 0, max_size: int = 10) -> SearchStrategy:
+    def draw(rng: random.Random):
+        k = rng.randint(min_size, max_size)
+        out = {}
+        for _ in range(k * 3):          # keys may collide; over-draw a bit
+            if len(out) >= k:
+                break
+            out[keys.do_draw(rng)] = values.do_draw(rng)
+        return out
+
+    return SearchStrategy(draw, "dictionaries(...)")
+
+
+def composite(fn):
+    """``@st.composite`` — fn's first arg is ``draw``."""
+
+    @functools.wraps(fn)
+    def make(*args, **kwargs) -> SearchStrategy:
+        def draw(rng: random.Random):
+            return fn(lambda strat: strat.do_draw(rng), *args, **kwargs)
+        return SearchStrategy(draw, f"composite({fn.__name__})")
+
+    return make
+
+
+class DataObject:
+    """Interactive draws inside the test body (``st.data()``)."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+        self.draws: list = []
+
+    def draw(self, strategy: SearchStrategy, label: str | None = None):
+        v = strategy.do_draw(self._rng)
+        self.draws.append(v)
+        return v
+
+    def __repr__(self) -> str:
+        return f"data(drawn={self.draws!r})"
+
+
+class _DataStrategy(SearchStrategy):
+    def __init__(self):
+        super().__init__(lambda rng: DataObject(rng), "data()")
+
+
+def data() -> SearchStrategy:
+    return _DataStrategy()
+
+
+# ---------------------------------------------------------------------------
+# given / settings
+# ---------------------------------------------------------------------------
+
+class settings:  # noqa: N801 - mirrors the hypothesis API name
+    """Both a decorator (``@settings(...)``) and a value holder."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+        self.deadline = deadline
+
+    def __call__(self, fn):
+        fn._propcheck_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("propcheck shim supports keyword strategies only")
+
+    def decorate(fn):
+        inner_settings = getattr(fn, "_propcheck_settings", None)
+
+        @functools.wraps(fn)
+        def runner(*args, **fixture_kwargs):
+            st_obj = (getattr(runner, "_propcheck_settings", None)
+                      or inner_settings or settings())
+            seed = zlib.crc32(
+                f"{fn.__module__}.{fn.__qualname__}".encode()) & 0xFFFFFFFF
+            rng = random.Random(seed)
+            executed = 0
+            rejected = 0
+            while executed < st_obj.max_examples:
+                example = None
+                try:
+                    # drawing stays inside the try: assume()/filter() called
+                    # from composite strategies must also discard + redraw
+                    example = {k: s.do_draw(rng)
+                               for k, s in kw_strategies.items()}
+                    fn(*args, **fixture_kwargs, **example)
+                except UnsatisfiedAssumption:
+                    rejected += 1
+                    if rejected > 50 * st_obj.max_examples + 100:
+                        raise RuntimeError(
+                            f"{fn.__name__}: assume() rejected too many "
+                            f"examples ({rejected})") from None
+                    continue
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified by example {example!r} "
+                        f"(shim seed {seed}): {e!r}") from e
+                executed += 1
+
+        # pytest must not see the strategy kwargs as fixtures: drop the
+        # __wrapped__ escape hatch and expose a signature without them.
+        if hasattr(runner, "__wrapped__"):
+            del runner.__wrapped__
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in kw_strategies]
+        runner.__signature__ = sig.replace(parameters=keep)
+        runner.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return runner
+
+    return decorate
+
+
+# ---------------------------------------------------------------------------
+# module aliasing (used by conftest.py)
+# ---------------------------------------------------------------------------
+
+def install() -> None:
+    """Register this module as ``hypothesis`` + ``hypothesis.strategies``."""
+    hyp = types.ModuleType("hypothesis")
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "just", "sampled_from",
+                 "lists", "dictionaries", "composite", "data",
+                 "SearchStrategy"):
+        setattr(strat, name, globals()[name])
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(
+        too_slow=None, filter_too_much=None, data_too_large=None)
+    hyp.__version__ = "0.0-propcheck-shim"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -13,6 +13,20 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
+TESTS = os.path.dirname(os.path.abspath(__file__))
+
+# Offline property-testing: alias tests/_propcheck.py into sys.modules as
+# ``hypothesis`` ONLY when the real hypothesis cannot be imported (the
+# container has no network for pip).  When hypothesis is installed, the
+# real library is used and the shim never loads.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    if TESTS not in sys.path:
+        sys.path.insert(0, TESTS)
+    import _propcheck
+
+    _propcheck.install()
 
 
 def run_multidevice(code: str, devices: int = 8, timeout: int = 560) -> str:

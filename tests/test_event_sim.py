@@ -1,0 +1,353 @@
+"""Discrete-event simulator: alpha-beta conformance on healthy rings,
+determinism, mid-collective failure semantics, and (property-based, via the
+offline shim) payload conservation + bounded retransmission under randomly
+injected NIC failures — the event-engine mirror of ``ChunkTransfer``
+losslessness in test_migration.py."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allreduce import build_r2ccl_all_reduce
+from repro.core.comm_sim import event_failure_scenario
+from repro.core.event_sim import (
+    EventSimError,
+    StalledError,
+    predict_ring_all_reduce,
+    simulate_program,
+    simulate_schedule,
+)
+from repro.core.executor_np import all_reduce_oracle
+from repro.core.failures import (
+    FailureType,
+    Failure,
+    flap_sequence,
+    link_flap,
+    nic_down_at,
+    slow_nic,
+)
+from repro.core.recursive import build_recursive_all_reduce
+from repro.core.schedule import (
+    build_ring_broadcast,
+    ring_program,
+    tree_program,
+)
+from repro.core.topology import DEFAULT_ALPHA, make_cluster
+
+
+def _data(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=size) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# conformance: healthy ring == alpha-beta closed form
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+@pytest.mark.parametrize("payload,bw", [(100e6, 50e9), (1e9, 25e9), (4e6, 50e9)])
+def test_healthy_ring_matches_alpha_beta(n, payload, bw):
+    """On a homogeneous healthy ring the event engine must reproduce
+    2(n-1) * (alpha + chunk/B) — same rounds, same rates, no contention."""
+    prog = ring_program(list(range(n)), n)
+    rep = simulate_program(prog, payload, capacities=[bw] * n, g=8)
+    want = predict_ring_all_reduce(n, payload, bw)
+    assert rep.completion_time == pytest.approx(want, rel=1e-6)
+
+
+def test_healthy_ring_matches_cluster_capacities():
+    cluster = make_cluster(8, 8, nic_bandwidth=25e9)
+    prog = ring_program(list(range(8)), 8)
+    rep = simulate_program(prog, 200e6, cluster=cluster)
+    want = predict_ring_all_reduce(8, 200e6, 8 * 25e9)
+    assert rep.completion_time == pytest.approx(want, rel=1e-6)
+
+
+def test_straggler_ring_no_worse_than_bottleneck_formula():
+    """One slow node throttles the ring; completion lands between the
+    fast-node and slow-node closed forms (pipelining hides some of it)."""
+    n, payload = 8, 400e6
+    caps = [50e9] * n
+    caps[3] = 20e9
+    prog = ring_program(list(range(n)), n)
+    rep = simulate_program(prog, payload, capacities=caps, g=8)
+    t_fast = predict_ring_all_reduce(n, payload, 50e9)
+    t_slow = predict_ring_all_reduce(n, payload, 20e9)
+    assert t_fast < rep.completion_time <= t_slow * (1 + 1e-6)
+
+
+def test_utilization_near_one_when_healthy():
+    prog = ring_program(list(range(8)), 8)
+    rep = simulate_program(prog, 800e6, capacities=[50e9] * 8, g=8)
+    for r, u in rep.link_utilization.items():
+        assert 0.9 < u <= 1.0 + 1e-9, (r, u)
+
+
+def test_link_bytes_match_schedule_model():
+    """Simulated per-edge traffic equals the IR's analytic edge_bytes."""
+    n, payload = 6, 120e6
+    prog = ring_program(list(range(n)), n)
+    rep = simulate_program(prog, payload, capacities=[50e9] * n, g=8)
+    want = prog.segments[0].schedule.edge_bytes(payload)
+    assert set(rep.link_bytes) == set(want)
+    for e, b in want.items():
+        assert rep.link_bytes[e] == pytest.approx(b, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_deterministic_under_failures():
+    n = 8
+    prog = ring_program(list(range(n)), n)
+    fails = [nic_down_at(2, 0, 3e-4), link_flap(5, 1, 8e-4, 4e-4)]
+    reps = [
+        simulate_program(prog, 500e6, capacities=[50e9] * n, g=8,
+                         failures=fails)
+        for _ in range(2)
+    ]
+    assert reps[0].completion_time == reps[1].completion_time
+    assert reps[0].retransmitted_bytes == reps[1].retransmitted_bytes
+    assert reps[0].failovers == reps[1].failovers
+    assert reps[0].link_bytes == reps[1].link_bytes
+
+
+# ---------------------------------------------------------------------------
+# correctness of the data plane across program kinds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("builder", ["ring", "tree", "r2ccl", "recursive"])
+def test_programs_produce_allreduce(builder):
+    n, size = 6, 150
+    if builder == "ring":
+        prog = ring_program(list(range(n)), n)
+    elif builder == "tree":
+        prog = tree_program(list(range(n)), n)
+    elif builder == "r2ccl":
+        prog, _ = build_r2ccl_all_reduce(list(range(n)), 2, x=0.6, g=8)
+    else:
+        prog, _ = build_recursive_all_reduce(
+            [100e9, 250e9, 400e9, 400e9, 400e9, 400e9])
+    data = _data(n, size, seed=3)
+    rep = simulate_program(prog, size * 8.0, capacities=[50e9] * n,
+                           rank_data=data)
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+def test_broadcast_schedule():
+    n = 5
+    data = _data(n, 64, seed=1)
+    sched = build_ring_broadcast(list(range(n)), n, root=2)
+    rep = simulate_schedule(sched, 64 * 8.0, capacities=[50e9] * n,
+                            rank_data=data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, data[2], atol=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# failure semantics
+# ---------------------------------------------------------------------------
+
+def _mid_time(n, payload, bw, frac=0.37):
+    return frac * predict_ring_all_reduce(n, payload, bw)
+
+
+def test_nic_down_mid_collective_rolls_back():
+    n, payload, bw = 8, 800e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    tf = _mid_time(n, payload, bw)
+    data = _data(n, 256, seed=7)
+    rep = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                           rank_data=data, failures=[nic_down_at(3, 0, tf)])
+    healthy = predict_ring_all_reduce(n, payload, bw)
+    assert rep.failovers >= 1
+    assert rep.retransmitted_bytes > 0
+    # the rollback window is one chunk per interrupted transfer
+    chunk = payload / n
+    assert rep.retransmitted_bytes <= rep.failovers * chunk * (1 + 1e-9)
+    assert rep.completion_time > healthy
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+def test_flap_recovery_faster_than_permanent_death():
+    n, payload, bw = 8, 800e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    tf = _mid_time(n, payload, bw)
+    dead = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                            failures=[nic_down_at(3, 0, tf)])
+    flap = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                            failures=[link_flap(3, 0, tf, 1e-3)])
+    assert flap.completion_time <= dead.completion_time + 1e-12
+
+
+def test_flap_recovery_cannot_resurrect_dead_nic():
+    """A flap recovering on a rail a *different* failure killed must not
+    restore the dead NIC's bandwidth (losses are keyed per failure event)."""
+    n, payload, bw = 4, 400e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    tf = _mid_time(n, payload, bw)
+    dead_only = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                                 failures=[nic_down_at(1, 0, tf)])
+    dead_and_flap = simulate_program(
+        prog, payload, capacities=[bw] * n, g=8,
+        failures=[nic_down_at(1, 0, tf),
+                  link_flap(1, 0, tf * 1.2, tf * 0.2)])
+    # the extra flap can only add delay, never speed the run up
+    assert dead_and_flap.completion_time >= dead_only.completion_time - 1e-12
+
+
+def test_failure_on_unknown_rank_rejected():
+    prog = ring_program([0, 1, 2], 3)
+    with pytest.raises(EventSimError):
+        simulate_program(prog, 1e6, capacities=[50e9] * 3, g=8,
+                         failures=[nic_down_at(7, 0, 1e-4)])
+    with pytest.raises(EventSimError):        # rail out of range too
+        simulate_program(prog, 1e6, capacities=[50e9] * 3, g=8,
+                         failures=[nic_down_at(1, 9, 1e-4)])
+
+
+def test_out_of_scope_types_never_become_events():
+    """Out-of-scope failure types are not transport events, even with a
+    fractional severity or the whole-node rail=-1 convention."""
+    prog = ring_program([0, 1, 2, 3], 4)
+    bad = Failure(FailureType.SWITCH_OUTAGE, 1, -1, at_time=1e-5, severity=0.5)
+    rep = simulate_program(prog, 100e6, capacities=[50e9] * 4, g=8,
+                          failures=[bad])
+    want = predict_ring_all_reduce(4, 100e6, 50e9)
+    assert rep.completion_time == pytest.approx(want, rel=1e-6)
+
+
+def test_slow_nic_degrades_without_rollback():
+    n, payload, bw = 8, 800e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    rep = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                           failures=[slow_nic(3, 0, 0.0, 0.5)])
+    healthy = predict_ring_all_reduce(n, payload, bw)
+    assert rep.failovers == 0 and rep.retransmitted_bytes == 0
+    assert rep.completion_time > healthy
+    # losing half of one of 8 rails costs at most the 1/(1-x) ring slowdown
+    assert rep.completion_time <= predict_ring_all_reduce(
+        n, payload, bw * (1 - 0.5 / 8)) * (1 + 1e-6)
+
+
+def test_all_rails_dead_stalls():
+    n = 4
+    prog = ring_program(list(range(n)), n)
+    fails = [nic_down_at(1, r, 1e-5) for r in range(8)]
+    with pytest.raises(StalledError):
+        simulate_program(prog, 100e6, capacities=[50e9] * n, g=8,
+                         failures=fails)
+
+
+def test_flap_of_all_rails_recovers_and_completes():
+    n = 4
+    prog = ring_program(list(range(n)), n)
+    fails = [link_flap(1, r, 1e-5, 5e-3) for r in range(8)]
+    rep = simulate_program(prog, 100e6, capacities=[50e9] * n, g=8,
+                           failures=fails)
+    assert rep.completion_time > 5e-3   # had to wait out the outage
+
+
+def test_bad_arguments():
+    prog = ring_program([0, 1, 2], 3)
+    with pytest.raises(EventSimError):
+        simulate_program(prog, 1e6)                       # no capacities
+    with pytest.raises(EventSimError):
+        simulate_program(prog, 1e6, capacities=[1e9] * 2)  # wrong arity
+    with pytest.raises(EventSimError):
+        simulate_program(prog, 1e6, cluster=make_cluster(4, 8))
+
+
+# ---------------------------------------------------------------------------
+# property tests (offline shim): conservation under random mid-collective
+# NIC failures — every rank still ends with the full reduced payload, and
+# retransmitted bytes never exceed the rollback window.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 8),
+    size=st.integers(8, 200),
+    seed=st.integers(0, 99),
+    fail_fracs=st.lists(st.floats(0.05, 0.95), min_size=0, max_size=3),
+    fail_node=st.integers(0, 7),
+)
+def test_event_conservation_under_failures(n, size, seed, fail_fracs, fail_node):
+    fail_node = fail_node % n
+    payload = size * 8.0
+    bw = 50e9
+    prog = ring_program(list(range(n)), n)
+    healthy = predict_ring_all_reduce(n, payload, bw)
+    fails = [
+        # distinct rails so no event is a duplicate of an already-dead NIC;
+        # recovery keeps the sim from stalling when all rails get hit
+        link_flap(fail_node, i, f * healthy, healthy)
+        for i, f in enumerate(fail_fracs)
+    ]
+    data = _data(n, size, seed)
+    rep = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                           rank_data=data, failures=fails,
+                           repair_latency=1e-5)
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:                       # losslessness
+        np.testing.assert_allclose(d, want, atol=1e-9)
+    # rollback window: at most one in-flight chunk per failover retransmits
+    max_transfer = payload / prog.segments[0].schedule.num_chunks
+    assert rep.retransmitted_bytes <= rep.failovers * max_transfer * (1 + 1e-9)
+    assert rep.failovers <= 2 * len(fails)        # tx + rx per failed node
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 7),
+    deg=st.integers(0, 6),
+    x=st.floats(0.1, 0.9),
+    seed=st.integers(0, 50),
+    fail_frac=st.floats(0.05, 0.9),
+)
+def test_r2ccl_program_conserves_under_failure(n, deg, x, seed, fail_frac):
+    """The decomposed R2CCL program (concurrent segments) stays lossless
+    when a NIC dies mid-collective."""
+    deg = deg % n
+    payload = 160 * 8.0
+    prog, _ = build_r2ccl_all_reduce(list(range(n)), deg, x=x, g=8)
+    healthy = simulate_program(prog, payload, capacities=[50e9] * n, g=8)
+    fails = [link_flap((deg + 1) % n, 0,
+                       fail_frac * healthy.completion_time,
+                       healthy.completion_time)]
+    data = _data(n, 160, seed)
+    rep = simulate_program(prog, payload, capacities=[50e9] * n, g=8,
+                           rank_data=data, failures=fails, repair_latency=1e-5)
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# scenario helper (comm_sim.event_failure_scenario)
+# ---------------------------------------------------------------------------
+
+def test_scenario_preplanned_r2ccl_beats_mid_ring():
+    cluster = make_cluster(4, 8, nic_bandwidth=25e9)
+    known = event_failure_scenario(cluster, 100e6,
+                                   [nic_down_at(1, 0, 0.0)], strategy="r2ccl")
+    surprise = event_failure_scenario(
+        cluster, 100e6,
+        [nic_down_at(1, 0, 0.37 * known["healthy_time"])], strategy="ring")
+    assert known["retransmitted_bytes"] == 0      # planned around the failure
+    assert surprise["failovers"] >= 1             # caught mid-flight
+    assert known["completion_time"] < surprise["completion_time"]
+
+
+def test_scenario_unsupported_failure_ignored_by_planner():
+    cluster = make_cluster(4, 8, nic_bandwidth=25e9)
+    bad = Failure(FailureType.SWITCH_OUTAGE, 0, -1)
+    sc = event_failure_scenario(cluster, 50e6, [bad], strategy="r2ccl")
+    # out-of-scope failures are not transport events: nothing degrades
+    assert sc["overhead"] == pytest.approx(0.0, abs=1e-9)
+    assert sc["failovers"] == 0

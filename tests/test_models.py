@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# minutes of model compiles: excluded from the fast tier (scripts/test.sh)
+pytestmark = pytest.mark.slow
+
 from repro.data import make_batch
 from repro.models import (
     apply_model,

@@ -1,0 +1,118 @@
+"""The offline hypothesis shim itself: redraw-on-assume (including inside
+composite strategies), determinism, and falsifying-example reporting.
+Tests the shim directly so they hold whether or not real hypothesis is
+installed."""
+
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _propcheck as pc
+
+
+def test_assume_in_test_body_redraws():
+    seen = []
+
+    @pc.settings(max_examples=10)
+    @pc.given(x=pc.integers(0, 100))
+    def prop(x):
+        pc.assume(x % 2 == 0)
+        seen.append(x)
+
+    prop()
+    assert len(seen) == 10
+    assert all(x % 2 == 0 for x in seen)
+
+
+def test_assume_inside_composite_redraws():
+    """assume() called while *drawing* (composite body) must discard and
+    redraw, not escape as an error."""
+
+    @pc.composite
+    def evens(draw):
+        v = draw(pc.integers(0, 100))
+        pc.assume(v % 2 == 0)
+        return v
+
+    seen = []
+
+    @pc.settings(max_examples=8)
+    @pc.given(x=evens())
+    def prop(x):
+        seen.append(x)
+
+    prop()
+    assert len(seen) == 8
+    assert all(x % 2 == 0 for x in seen)
+
+
+def test_filter_exhaustion_is_discard_not_error():
+    hits = []
+
+    @pc.settings(max_examples=3)
+    @pc.given(x=pc.integers(0, 1).filter(lambda v: v >= 0))
+    def prop(x):
+        hits.append(x)
+
+    prop()
+    assert len(hits) == 3
+
+
+def test_deterministic_across_runs():
+    runs = []
+    for _ in range(2):
+        vals = []
+
+        @pc.settings(max_examples=5)
+        @pc.given(x=pc.integers(0, 10**6), y=pc.floats(0.0, 1.0))
+        def prop(x, y):
+            vals.append((x, y))
+
+        prop.__qualname__ = "stable_name"
+        prop()
+        runs.append(vals)
+    assert runs[0] == runs[1]
+
+
+def test_falsifying_example_reported():
+    @pc.settings(max_examples=20)
+    @pc.given(x=pc.integers(0, 100))
+    def prop(x):
+        assert x < 101            # never fails
+    prop()
+
+    @pc.settings(max_examples=20)
+    @pc.given(x=pc.integers(50, 100))
+    def bad(x):
+        assert x < 50             # always fails
+
+    with pytest.raises(AssertionError, match="falsified by example"):
+        bad()
+
+
+def test_data_and_sampled_from():
+    picks = []
+
+    @pc.settings(max_examples=6)
+    @pc.given(d=pc.data(), e=pc.sampled_from(["a", "b"]))
+    def prop(d, e):
+        v = d.draw(pc.lists(pc.booleans(), min_size=1, max_size=3))
+        picks.append((e, tuple(v)))
+        assert e in ("a", "b")
+        assert 1 <= len(v) <= 3
+
+    prop()
+    assert len(picks) == 6
+
+
+def test_dictionaries_respect_max_size():
+    @pc.settings(max_examples=10)
+    @pc.given(d=pc.dictionaries(pc.integers(0, 5), pc.floats(0, 1),
+                                max_size=4))
+    def prop(d):
+        assert len(d) <= 4
+        assert all(0 <= k <= 5 for k in d)
+
+    prop()

@@ -9,6 +9,10 @@ it would have produced without the failure (modulo scheduling latency).
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# end-to-end model training runs: excluded from the fast tier (scripts/test.sh)
+pytestmark = pytest.mark.slow
 
 from repro.core.detection import FailureDetector, FaultLocation
 from repro.core.executor_np import ExecStats, execute_program

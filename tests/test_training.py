@@ -7,6 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# minutes of model compiles (loss-descent runs): excluded from the fast tier
+pytestmark = pytest.mark.slow
+
 from repro.data import make_batch
 from repro.models import get_smoke_config, init_model
 from repro.optim import AdamWConfig, adamw_update, global_norm, init_opt_state
