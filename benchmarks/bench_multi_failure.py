@@ -33,8 +33,12 @@ from .common import Reporter
 
 
 def _event_scenarios(r: Reporter, *, servers: int, devices: int,
-                     payload: float) -> None:
-    """Mid-collective failure patterns, fully simulated."""
+                     payload: float, seed: int = 0) -> None:
+    """Mid-collective failure patterns, fully simulated.  The named
+    scenarios are deterministic; ``seed`` drives the random k-failure
+    pattern row so the JSON is reproducible run-to-run."""
+    from repro.core.failures import random_failures
+
     cluster = make_cluster(servers, devices, nic_bandwidth=NIC_200G)
     healthy = event_failure_scenario(cluster, payload, [])
     t_h = healthy["completion_time"]
@@ -54,6 +58,8 @@ def _event_scenarios(r: Reporter, *, servers: int, devices: int,
         ]),
         "two_node_mid": ("ring", [nic_down_at(1, 0, mid),
                                   nic_down_at(servers - 1, 1, 0.61 * t_h)]),
+        "random_k2_mid": ("ring", random_failures(
+            2, servers, devices, seed=seed, at_time=mid)),
     }
     for name, (strategy, fails) in scenarios.items():
         sc = event_failure_scenario(cluster, payload, fails, strategy=strategy,
@@ -66,9 +72,11 @@ def _event_scenarios(r: Reporter, *, servers: int, devices: int,
               f"of {payload:.3g}B payload")
 
 
-def run(trials: int = 50, mode: str = "alpha_beta", tiny: bool = False) -> None:
+def run(trials: int = 50, mode: str = "alpha_beta", tiny: bool = False,
+        seed: int = 0) -> None:
     r = Reporter("multi_failure_fig10")
     r.data["mode"] = mode
+    r.data["seed"] = seed
 
     if tiny:
         servers, devices, ks = 2, 4, (1, 2)
@@ -85,7 +93,7 @@ def run(trials: int = 50, mode: str = "alpha_beta", tiny: bool = False) -> None:
     means = []
     for k in ks:
         mc = monte_carlo_multi_failure(job, cluster, k, trials=trials,
-                                       strategy="auto", mode=mode)
+                                       strategy="auto", mode=mode, seed=seed)
         means.append(mc["mean"])
         r.row(f"k{k}_mean_overhead", mc["mean"],
               f"p95={mc['p95']:.3%} max={mc['max']:.3%}")
@@ -97,7 +105,7 @@ def run(trials: int = 50, mode: str = "alpha_beta", tiny: bool = False) -> None:
           "<1 means sub-linear")
 
     _event_scenarios(r, servers=2 if tiny else 8, devices=4 if tiny else 8,
-                     payload=2e6 if tiny else 100e6)
+                     payload=2e6 if tiny else 100e6, seed=seed)
     r.save()
 
 

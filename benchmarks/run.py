@@ -20,6 +20,7 @@ BENCHES = [
     ("training", "bench_training", "Fig.7 Megatron testbed overheads"),
     ("scaling", "bench_scaling", "Fig.8/9 7B scaling + 175B/RLHF vs AdapCC"),
     ("multi_failure", "bench_multi_failure", "Fig.10 Monte Carlo k failures"),
+    ("runtime", "bench_runtime", "Sec.4-6 closed-loop recovery stage breakdown"),
     ("inference", "bench_inference", "Fig.11-13 TTFT/TPOT under failure"),
     ("dejavu", "bench_dejavu", "Fig.14 DejaVu comparison"),
     ("detection", "bench_detection", "Sec.4 detection + migration latency"),
@@ -38,6 +39,10 @@ def main(argv: list[str] | None = None) -> None:
                          "(event = discrete-event schedule execution)")
     ap.add_argument("--tiny", action="store_true",
                     help="<=8 simulated GPUs per bench (CI smoke scale)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="top-level RNG seed threaded into every bench that "
+                         "randomizes (Monte Carlo patterns, event scenarios) "
+                         "so the emitted JSON is reproducible run-to-run")
     args = ap.parse_args(argv)
 
     print("benchmark,metric,value,derived")
@@ -54,6 +59,8 @@ def main(argv: list[str] | None = None) -> None:
                 kw["mode"] = args.sim_mode
             if "tiny" in accepted:
                 kw["tiny"] = args.tiny
+            if "seed" in accepted:
+                kw["seed"] = args.seed
             if "trials" in accepted and args.fast:
                 kw["trials"] = 10
             mod.run(**kw)

@@ -12,6 +12,15 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# Fail loudly if the package is not importable: without this, a broken
+# PYTHONPATH/src layout makes pytest silently collect zero repro tests.
+if ! python -c "import repro" 2>/dev/null; then
+    echo "error: cannot import 'repro' with PYTHONPATH=$PYTHONPATH" >&2
+    echo "       expected the package at $(pwd)/src/repro — run this script" >&2
+    echo "       from a checkout, or set PYTHONPATH=src manually." >&2
+    exit 2
+fi
+
 if [[ "${1:-}" == "--all" ]]; then
     shift
     exec python -m pytest -q "$@"

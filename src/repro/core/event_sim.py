@@ -34,6 +34,15 @@ Model
 * When ``rank_data`` is given the engine also moves real numpy payloads
   (snapshot at transfer start, write/accumulate at completion), so
   conservation under failure is *checked*, not presumed.
+* An optional ``controller`` (the online recovery control plane in
+  :mod:`repro.runtime`) is consulted at every failure/recovery event in
+  virtual time.  Its :class:`RecoveryDecision` *derives* the restart delay
+  from the detect→diagnose→migrate→rebalance pipeline instead of the
+  closed-form ``repair_latency`` constant, rescales residual capacity by
+  the rebalance detour efficiency, and may swap in a freshly planned
+  :class:`CollectiveProgram` mid-collective at chunk granularity
+  (completed chunk work is retained; the new schedule covers the
+  remaining bytes).
 
 The engine reports per-collective completion time, per-link bytes,
 per-rank egress utilization, and retransmitted bytes after failover.
@@ -56,7 +65,7 @@ from .topology import ClusterTopology, DEFAULT_ALPHA
 #: hot-repair figure; see core.migration.migration_latency for the breakdown)
 DEFAULT_REPAIR_LATENCY = 1.5e-3
 
-_BLOCKED, _LATENT, _ACTIVE, _DONE = range(4)
+_BLOCKED, _LATENT, _ACTIVE, _DONE, _CANCELLED = range(5)
 
 
 class EventSimError(RuntimeError):
@@ -87,6 +96,39 @@ class _Transfer:
 
 
 @dataclasses.dataclass
+class RecoveryDecision:
+    """What the online control plane tells the engine to do about one failure.
+
+    Returned by ``controller.on_failure``; every field is optional-by-default
+    so a controller can intervene as little or as much as it likes.
+    """
+
+    #: restart delay for transfers rolled back by this failure — derived from
+    #: the detect→diagnose→migrate→rebalance pipeline, replacing the engine's
+    #: closed-form ``repair_latency`` constant
+    repair_latency: float
+    #: per-rank multiplicative factor on residual capacity (rebalance detour
+    #: efficiency); removed again when the failure recovers
+    capacity_scale: Mapping[int, float] | None = None
+    #: new collective program to swap in mid-collective (algorithm
+    #: re-selection); completed chunk work is retained
+    replan: "CollectiveProgram | None" = None
+    #: virtual time from the failure until the new program is live (the full
+    #: pipeline latency including the replan stage)
+    replan_delay: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairEvent:
+    """One hard failure's hot-repair as the engine observed it."""
+
+    at_time: float
+    delay: float                 # restart delay applied to rolled-back flows
+    rollbacks: int               # in-flight transfers rewound by this failure
+    derived: bool                # True = delay came from a controller pipeline
+
+
+@dataclasses.dataclass
 class EventSimReport:
     """What one simulated collective did."""
 
@@ -105,6 +147,12 @@ class EventSimReport:
     events: int
     #: final per-rank buffers when ``rank_data`` was supplied, else None
     rank_data: list[np.ndarray] | None = None
+    #: mid-collective program swaps performed by the control plane
+    replans: int = 0
+    #: transfers of a superseded program cancelled at a replan point
+    cancelled_transfers: int = 0
+    #: per-hard-failure hot-repair record, in virtual-time order
+    repair_events: list[RepairEvent] = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +169,10 @@ class _Capacities:
         # flap's recovery can never resurrect a rail a different failure
         # killed: per rank, failure -> (rail, severity)
         self._lost: list[dict[Failure, tuple[int, float]]] = [{} for _ in base]
+        # multiplicative residual-capacity factors installed by the control
+        # plane (rebalance detour efficiency), keyed by failure for the same
+        # recovery-safety reason: per rank, failure -> factor
+        self._scale: list[dict[Failure, float]] = [{} for _ in base]
 
     @classmethod
     def from_cluster(cls, cluster: ClusterTopology) -> "_Capacities":
@@ -139,6 +191,12 @@ class _Capacities:
 
     def recover(self, rank: int, failure: Failure) -> None:
         self._lost[rank].pop(failure, None)
+        for scales in self._scale:
+            scales.pop(failure, None)
+
+    def scale(self, rank: int, failure: Failure, factor: float) -> None:
+        """Install a residual-capacity factor tied to ``failure``'s lifetime."""
+        self._scale[rank][failure] = factor
 
     def capacity(self, rank: int) -> float:
         # a rail's loss is the worst active degradation on it (a dead NIC is
@@ -147,7 +205,10 @@ class _Capacities:
         for rail, sev in self._lost[rank].values():
             worst[rail] = max(worst.get(rail, 0.0), sev)
         lost = sum(self.rail_bw[rank][rail] * sev for rail, sev in worst.items())
-        return max(0.0, self.base[rank] - lost)
+        cap = max(0.0, self.base[rank] - lost)
+        for factor in self._scale[rank].values():
+            cap *= factor
+        return cap
 
 
 def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
@@ -195,12 +256,17 @@ class EventSimulator:
         failures: Sequence[Failure] = (),
         rank_data: Sequence[np.ndarray] | None = None,
         repair_latency: float = DEFAULT_REPAIR_LATENCY,
+        controller: object | None = None,
     ):
         prog.validate()
         self.prog = prog
+        self.active_prog = prog           # replaced on a mid-collective replan
         self.total_bytes = float(total_bytes)
         self.alpha = alpha
         self.repair_latency = repair_latency
+        # duck-typed recovery control plane: on_failure(sim, now, failure) ->
+        # RecoveryDecision | None, on_recover(sim, now, failure) -> None
+        self.controller = controller
         if cluster is not None:
             if cluster.num_nodes != prog.n:
                 raise EventSimError(
@@ -216,9 +282,9 @@ class EventSimulator:
         self.healthy_caps = [self.caps.capacity(r) for r in range(prog.n)]
 
         self.transfers: list[_Transfer] = []
-        self._seg_last_tid: list[int] = []
-        self._build_transfers()
-        self._wire_dependencies()
+        self._instantiate(prog, self.total_bytes)
+        self._remaining = len(self.transfers)
+        self._max_iters = 50 * len(self.transfers) + 10_000
         self._init_data(rank_data)
 
         # event queue: (time, seq, kind, arg)
@@ -251,6 +317,9 @@ class EventSimulator:
         self.rank_rx: dict[int, float] = {r: 0.0 for r in range(prog.n)}
         self.retransmitted_bytes = 0.0
         self.failovers = 0
+        self.replans = 0
+        self.cancelled_transfers = 0
+        self.repair_events: list[RepairEvent] = []
         self.events_processed = 0
         self.segment_finish = [0.0] * len(prog.segments)
 
@@ -259,10 +328,19 @@ class EventSimulator:
         heapq.heappush(self._events, (t, self._seq, kind, arg))
         self._seq += 1
 
-    def _build_transfers(self) -> None:
-        for si, seg in enumerate(self.prog.segments):
+    def _instantiate(self, prog: CollectiveProgram, total_bytes: float) -> list[_Transfer]:
+        """Build + dependency-wire ``prog``'s transfers over ``total_bytes``.
+
+        Appends to ``self.transfers`` (tids continue after existing ones) and
+        returns the new transfers.  Dependency rule: transfer (seg, step i,
+        {s,d}) waits on all transfers of s's and d's previous participating
+        step in the same segment.  Used both at init and when the control
+        plane swaps in a replanned program mid-collective.
+        """
+        base = len(self.transfers)
+        for si, seg in enumerate(prog.segments):
             sched = seg.schedule
-            seg_bytes = self.total_bytes * seg.frac
+            seg_bytes = total_bytes * seg.frac
             chunk_bytes = seg_bytes / sched.num_chunks
             for step_i, st in enumerate(sched.steps):
                 size = seg_bytes if st.whole_buffer else chunk_bytes
@@ -275,17 +353,14 @@ class EventSimulator:
                         send_chunk=st.send_chunk[src],
                         recv_chunk=st.recv_chunk[dst],
                     ))
-
-    def _wire_dependencies(self) -> None:
-        """Transfer (seg, step i, {s,d}) waits on all transfers of s's and
-        d's previous participating step in the same segment."""
+        new = self.transfers[base:]
         by_seg_step_rank: dict[tuple[int, int, int], list[_Transfer]] = {}
-        for t in self.transfers:
+        for t in new:
             for r in (t.src, t.dst):
                 by_seg_step_rank.setdefault((t.seg, t.step, r), []).append(t)
-        for si, seg in enumerate(self.prog.segments):
+        for si, seg in enumerate(prog.segments):
             rank_steps = seg.schedule.rank_steps()
-            for t in self.transfers:
+            for t in new:
                 if t.seg != si:
                     continue
                 prereqs: set[int] = set()
@@ -300,6 +375,7 @@ class EventSimulator:
                 t.deps = len(prereqs)
                 for p in prereqs:
                     self.transfers[p].dependents.append(t.tid)
+        return new
 
     def _init_data(self, rank_data: Sequence[np.ndarray] | None) -> None:
         """Per-rank, per-segment chunked float64 buffers (as executor_np)."""
@@ -396,9 +472,11 @@ class EventSimulator:
             if dep.deps == 0 and dep.state == _BLOCKED:
                 self._release(now, dep)
 
-    def _rollback(self, now: float, t: _Transfer) -> None:
+    def _rollback(self, now: float, t: _Transfer,
+                  delay: float | None = None) -> None:
         """DMA rollback: bytes already streamed are retransmitted; the
-        transfer restarts (on a healthy rail) after the repair latency."""
+        transfer restarts (on a healthy rail) after the repair latency —
+        the closed-form constant, or the control plane's derived delay."""
         sent = t.size - t.remaining
         self.retransmitted_bytes += sent
         self.rank_tx[t.src] += sent          # wasted egress really happened
@@ -408,23 +486,95 @@ class EventSimulator:
         t.payload = None
         t.state = _LATENT
         self._active.discard(t.tid)
-        self._push(now + self.repair_latency + self.alpha, "activate", t.tid)
+        d = self.repair_latency if delay is None else delay
+        self._push(now + d + self.alpha, "activate", t.tid)
 
     def _apply_failure(self, now: float, f: Failure, recovering: bool) -> None:
         rank = f.node
         if recovering:
             self.caps.recover(rank, f)
+            if self.controller is not None:
+                self.controller.on_recover(self, now, f)
             return
         self.caps.fail(rank, f)
-        if f.severity < 1.0 or not f.escalates:
-            return                      # degradation only — nothing in flight dies
-        # A hard NIC death interrupts the node's striped channels: every
-        # in-flight transfer touching the node rewinds to its last completed
-        # chunk (DMA rollback) and restarts after the hot-repair latency.
-        for tid in sorted(self._active):
-            t = self.transfers[tid]
-            if t.src == rank or t.dst == rank:
-                self._rollback(now, t)
+        # Consult the co-simulated control plane *at the failure instant*:
+        # the pipeline it runs (detect → diagnose → migrate → rebalance →
+        # replan) determines the restart delay, the post-rebalance residual
+        # efficiency, and whether a new program is swapped in.
+        decision: RecoveryDecision | None = None
+        if self.controller is not None:
+            decision = self.controller.on_failure(self, now, f)
+        if decision is not None and decision.capacity_scale:
+            for r, factor in decision.capacity_scale.items():
+                self.caps.scale(r, f, factor)
+        if f.severity >= 1.0 and f.escalates:
+            # A hard NIC death interrupts the node's striped channels: every
+            # in-flight transfer touching the node rewinds to its last
+            # completed chunk (DMA rollback) and restarts after the hot-repair
+            # latency.
+            delay = decision.repair_latency if decision is not None else None
+            rollbacks = 0
+            for tid in sorted(self._active):
+                t = self.transfers[tid]
+                if t.src == rank or t.dst == rank:
+                    self._rollback(now, t, delay)
+                    rollbacks += 1
+            self.repair_events.append(RepairEvent(
+                at_time=now,
+                delay=self.repair_latency if delay is None else delay,
+                rollbacks=rollbacks,
+                derived=decision is not None,
+            ))
+        if decision is not None and decision.replan is not None:
+            self._push(now + decision.replan_delay, "replan", decision.replan)
+
+    def _do_replan(self, now: float, prog: CollectiveProgram) -> None:
+        """Swap in a freshly planned program at chunk granularity.
+
+        Completed chunk work is retained: the fraction of communication work
+        already done under the old program stays done, every unfinished
+        transfer is cancelled (streamed-but-unacked bytes count as
+        retransmitted), and the new schedule is instantiated over the
+        remaining payload bytes.
+        """
+        if self._data is not None:
+            raise EventSimError(
+                "mid-collective replan with rank_data is unsupported: partial "
+                "progress of two different algorithms cannot be merged")
+        prog.validate()
+        if prog.n != self.active_prog.n:
+            raise EventSimError(
+                f"replanned program has {prog.n} ranks, expected "
+                f"{self.active_prog.n}")
+        live = [t for t in self.transfers if t.state != _CANCELLED]
+        total_work = sum(t.size for t in live)
+        done_work = sum(t.size for t in live if t.state == _DONE)
+        frac_done = done_work / total_work if total_work > 0 else 1.0
+        remaining_payload = self.total_bytes * max(0.0, 1.0 - frac_done)
+        cancelled = 0
+        for t in self.transfers:
+            if t.state in (_BLOCKED, _LATENT, _ACTIVE):
+                if t.state == _ACTIVE:
+                    sent = t.size - t.remaining
+                    self.retransmitted_bytes += sent
+                    self.rank_tx[t.src] += sent
+                    e = (t.src, t.dst)
+                    self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
+                t.state = _CANCELLED
+                t.payload = None
+                self._active.discard(t.tid)
+                cancelled += 1
+        self.cancelled_transfers += cancelled
+        self._remaining -= cancelled
+        self.active_prog = prog
+        self.segment_finish = [0.0] * len(prog.segments)
+        new = self._instantiate(prog, remaining_payload)
+        self._remaining += len(new)
+        self._max_iters += 50 * len(new) + 1_000
+        self.replans += 1
+        for t in new:
+            if t.deps == 0:
+                self._release(now, t)
 
     # -- main loop -----------------------------------------------------------
     def run(self) -> EventSimReport:
@@ -434,12 +584,10 @@ class EventSimulator:
             if t.deps == 0:
                 self._release(now, t)
 
-        remaining_transfers = len(self.transfers)
         guard = 0
-        max_iters = 50 * len(self.transfers) + 10_000
-        while remaining_transfers > 0:
+        while self._remaining > 0:
             guard += 1
-            if guard > max_iters:
+            if guard > self._max_iters:
                 raise EventSimError("event loop not converging")
             active = [self.transfers[i] for i in sorted(self._active)]
             rates = _fair_share(active, self.caps.capacity) if active else {}
@@ -483,7 +631,7 @@ class EventSimulator:
                          and (rates.get(t.tid, 0.0) > 0 or t.size <= 0)]
             for t in completed:
                 self._complete(now, t)
-                remaining_transfers -= 1
+                self._remaining -= 1
                 self.events_processed += 1
 
             while self._events and self._events[0][0] <= now + 1e-15:
@@ -497,6 +645,8 @@ class EventSimulator:
                     self._apply_failure(now, arg, recovering=False)
                 elif kind == "recover":
                     self._apply_failure(now, arg, recovering=True)
+                elif kind == "replan":
+                    self._do_replan(now, arg)
 
         makespan = now
         util = {}
@@ -515,6 +665,9 @@ class EventSimulator:
             transfers=len(self.transfers),
             events=self.events_processed,
             rank_data=self._final_data(),
+            replans=self.replans,
+            cancelled_transfers=self.cancelled_transfers,
+            repair_events=list(self.repair_events),
         )
 
 
@@ -533,6 +686,7 @@ def simulate_program(
     failures: Sequence[Failure] = (),
     rank_data: Sequence[np.ndarray] | None = None,
     repair_latency: float = DEFAULT_REPAIR_LATENCY,
+    controller: object | None = None,
 ) -> EventSimReport:
     """Execute ``prog`` on the discrete-event engine.
 
@@ -541,12 +695,14 @@ def simulate_program(
     rails for failure mapping) must be given.  ``failures`` are applied at
     their ``at_time`` timestamps; fractional ``severity`` rescales
     bandwidth only, full severity also rolls back in-flight transfers on
-    the failed rail.
+    the failed rail.  ``controller`` co-simulates an online recovery
+    control plane (see :mod:`repro.runtime`): its per-failure pipeline
+    replaces ``repair_latency`` and may replan mid-collective.
     """
     return EventSimulator(
         prog, total_bytes, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, rank_data=rank_data,
-        repair_latency=repair_latency,
+        repair_latency=repair_latency, controller=controller,
     ).run()
 
 

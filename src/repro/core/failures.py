@@ -69,6 +69,15 @@ class Failure:
     #: ``FailureState`` treats any escalated failure as the NIC being down.
     severity: float = 1.0
 
+    def __post_init__(self) -> None:
+        # A severity of 0 (nothing lost) or > 1 (more than the NIC's bandwidth)
+        # has no physical meaning and used to be silently accepted, which the
+        # slow-NIC spectrum then misinterpreted as a negative residual rate.
+        if not 0.0 < self.severity <= 1.0:
+            raise ValueError(
+                f"Failure.severity must be in (0, 1], got {self.severity!r} "
+                f"(1.0 = NIC fully dead, <1.0 = slow-NIC bandwidth spectrum)")
+
     @property
     def nic_key(self) -> tuple[int, int]:
         return (self.node, self.rail)

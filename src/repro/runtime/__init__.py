@@ -1,0 +1,29 @@
+"""Online recovery runtime: the paper's pipeline as a closed loop.
+
+  control_plane — HEALTHY→DETECTING→DIAGNOSING→MIGRATING→REBALANCED→
+                  REPLANNED state machine over the detection / migration /
+                  balance / planner models, with a per-stage latency ledger
+  cosim         — co-simulation with core.event_sim (failover latency is
+                  derived from the pipeline, not a constant)
+  scenarios     — timed multi-failure campaign DSL (builders + text spec)
+"""
+
+from .control_plane import (  # noqa: F401
+    ControlPlane,
+    LedgerEntry,
+    RecoveryLedger,
+    RecoveryOutcome,
+    RecoveryState,
+    STAGES,
+)
+from .cosim import CoSimReport, run_scenario  # noqa: F401
+from .scenarios import (  # noqa: F401
+    Scenario,
+    clean_nic_down,
+    correlated_nic_down,
+    failure_during_recovery,
+    flap_storm,
+    parse_campaign,
+    slow_nic_degradation,
+    standard_campaigns,
+)

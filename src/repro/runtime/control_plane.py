@@ -1,0 +1,340 @@
+"""Online recovery control plane (paper Sections 4-6 composed end-to-end).
+
+R²CCL's headline claim is not any single mechanism but the *pipeline*:
+bilateral-awareness detection, probe triangulation, pre-registered
+connection migration, bandwidth-aware redistribution, and algorithm
+re-selection composing into lossless low-millisecond failover.  This module
+is that pipeline as an executable state machine:
+
+    HEALTHY → DETECTING → DIAGNOSING → MIGRATING → REBALANCED → REPLANNED
+        ^                                              |            |
+        +------ re-probe success (all NICs healthy) ---+------------+
+
+Each :meth:`ControlPlane.handle_failure` call plays one failure through the
+stages, drawing every stage's latency from the corresponding offline model
+(:mod:`core.detection`, :mod:`core.migration`, :mod:`core.balance`,
+:mod:`core.planner`) and recording it in a per-stage :class:`RecoveryLedger`.
+The returned :class:`core.event_sim.RecoveryDecision` feeds the co-simulated
+discrete-event engine, so failover latency is *derived* from the pipeline
+instead of the alpha-beta mode's ``R2CCL_MIGRATION_LATENCY`` constant — the
+constant stays as the closed-form approximation and conformance target (a
+clean single-NIC-down pipeline must land within 2x of it, in the paper's
+low-millisecond hot-repair range).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.core.balance import BalancePlan, rebalance
+from repro.core.comm_sim import DETOUR_EFFICIENCY, _strategy_program
+from repro.core.detection import BROADCAST_LATENCY, FailureDetector
+from repro.core.event_sim import RecoveryDecision
+from repro.core.failures import OUT_OF_SCOPE, Failure, FailureState, FailureType
+from repro.core.migration import ROLLBACK_CPU_COST, RegistrationTable
+from repro.core.planner import Collective, Planner, Strategy, collective_payload_factor
+from repro.core.schedule import CollectiveProgram
+from repro.core.topology import ClusterTopology
+
+#: CPU time to compute a BalancePlan and install the detour routes (the plan
+#: is a closed-form water-fill over <= g NICs; the cost is dominated by
+#: updating the channel->NIC indirection tables on every device).
+REBALANCE_COMPUTE_COST = 60e-6
+#: CPU time for the planner's alpha-beta strategy sweep + schedule build.
+REPLAN_COMPUTE_COST = 200e-6
+#: A slow NIC raises no transport error; it is caught by the bandwidth
+#: monitor's sampling window instead of a CQE (paper Section 4.2's periodic
+#: probing, run against throughput counters).
+SLOW_NIC_DETECT_LATENCY = 500e-6
+#: Repeated flaps of the same NIC within one collective trigger algorithm
+#: re-selection (the paper's "adapting to observed failure patterns").
+DEFAULT_FLAP_REPLAN_THRESHOLD = 3
+
+
+class RecoveryState(enum.Enum):
+    HEALTHY = "healthy"
+    DETECTING = "detecting"
+    DIAGNOSING = "diagnosing"
+    MIGRATING = "migrating"
+    REBALANCED = "rebalanced"
+    REPLANNED = "replanned"
+
+
+#: ledger stage keys, in pipeline order
+STAGES = ("detect", "diagnose", "migrate", "rebalance", "replan")
+
+
+@dataclasses.dataclass
+class LedgerEntry:
+    """Per-stage latency breakdown of one recovery pipeline run."""
+
+    failure: Failure | None            # None for the end-of-campaign replan
+    t_start: float                     # virtual time the pipeline began
+    stages: dict[str, float]           # stage -> latency (pipeline order)
+    state_after: RecoveryState
+    backup_nic: tuple[int, int] | None = None
+    strategy: str | None = None        # planner choice when replanned
+    balance_efficiency: float = 1.0    # residual-capacity factor installed
+
+    @property
+    def total(self) -> float:
+        return sum(self.stages.values())
+
+    @property
+    def hot_repair_latency(self) -> float:
+        """Pipeline latency excluding the replan stage — the delay after
+        which rolled-back transfers restart on the backup NIC."""
+        return sum(v for k, v in self.stages.items() if k != "replan")
+
+
+@dataclasses.dataclass
+class RecoveryLedger:
+    entries: list[LedgerEntry] = dataclasses.field(default_factory=list)
+
+    def record(self, entry: LedgerEntry) -> None:
+        self.entries.append(entry)
+
+    def stage_totals(self) -> dict[str, float]:
+        out = {s: 0.0 for s in STAGES}
+        for e in self.entries:
+            for k, v in e.stages.items():
+                out[k] = out.get(k, 0.0) + v
+        return out
+
+    def total_latency(self) -> float:
+        return sum(e.total for e in self.entries)
+
+
+@dataclasses.dataclass
+class RecoveryOutcome:
+    """One handled failure: the ledger entry + the engine-facing decision."""
+
+    entry: LedgerEntry
+    decision: RecoveryDecision
+
+
+class ControlPlane:
+    """Closed-loop detect→diagnose→migrate→rebalance→replan runtime.
+
+    Stateless about the data plane: it consumes failure/recovery events (from
+    the co-simulated event engine, the serving engine, or a test harness),
+    mutates its :class:`FailureState`, and emits :class:`RecoveryDecision`\\ s.
+    """
+
+    def __init__(
+        self,
+        cluster: ClusterTopology,
+        *,
+        payload_bytes: float = float(1 << 26),
+        collective: Collective = Collective.ALL_REDUCE,
+        flap_replan_threshold: int = DEFAULT_FLAP_REPLAN_THRESHOLD,
+        replan: bool = True,
+        state: FailureState | None = None,
+    ):
+        self.cluster = cluster
+        self.payload_bytes = float(payload_bytes)
+        self.collective = collective
+        self.flap_replan_threshold = flap_replan_threshold
+        self.replan_enabled = replan
+        self.failure_state = state if state is not None else FailureState()
+        self.detector = FailureDetector(self.failure_state)
+        self.planner = Planner(cluster)
+        self.ledger = RecoveryLedger()
+        self.state = RecoveryState.HEALTHY
+        self.transitions: list[tuple[float, RecoveryState]] = [
+            (0.0, RecoveryState.HEALTHY)]
+        self.flap_counts: dict[tuple[int, int], int] = {}
+        self.current_program: CollectiveProgram | None = None
+
+    # -- state machine plumbing ---------------------------------------------
+    def _transition(self, t: float, state: RecoveryState) -> None:
+        self.state = state
+        self.transitions.append((t, state))
+
+    def _probe_points(
+        self, failure: Failure
+    ) -> tuple[tuple[int, int], tuple[int, int], tuple[int, int] | None]:
+        """(src, peer, aux) NICs for triangulation: the failed connection's
+        endpoints are ring neighbours on the same rail; the auxiliary vantage
+        point needs a third node (with 2 nodes the location degrades to the
+        LINK-vs-NIC ambiguity, which detection also models)."""
+        n = self.cluster.num_nodes
+        rail = max(failure.rail, 0)
+        peer_node = (failure.node + 1) % n
+        peer_rail = min(rail, len(self.cluster.nodes[peer_node].nics) - 1)
+        aux = None
+        if n >= 3:
+            aux_node = (failure.node + 2) % n
+            aux = (aux_node, min(rail, len(self.cluster.nodes[aux_node].nics) - 1))
+        return (failure.node, rail), (peer_node, peer_rail), aux
+
+    def _rebalance_plan(self, node_id: int) -> BalancePlan | None:
+        node = self.cluster.nodes[node_id]
+        g = self.cluster.devices_per_node
+        factor = collective_payload_factor(self.collective)
+        per_dev = [self.payload_bytes * factor / g] * g
+        try:
+            return rebalance(node, per_dev, self.failure_state.failed_nics)
+        except ValueError:                 # no healthy NICs left on the node
+            return None
+
+    def _plan_program(self) -> tuple[CollectiveProgram, str]:
+        try:
+            plan = self.planner.choose_strategy(
+                self.collective, self.payload_bytes, self.failure_state,
+                g=self.cluster.devices_per_node)
+            strat = {
+                Strategy.RING: "ring", Strategy.TREE: "ring",
+                Strategy.HOT_REPAIR: "hot_repair", Strategy.BALANCE: "balance",
+                Strategy.R2CCL_ALL_REDUCE: "r2ccl",
+                Strategy.RECURSIVE: "recursive",
+            }[plan.strategy]
+            name = plan.strategy.value
+        except ValueError:
+            # A fully dead node leaves the planner nothing to price (zero
+            # residual bandwidth everywhere it looks); fall back to the ring
+            # schedule — completing the collective then needs node-level
+            # recovery, which is out of R2CCL's NIC-failure scope.
+            strat = name = "ring"
+        prog = _strategy_program(strat, self.cluster, self.failure_state,
+                                 g=self.cluster.devices_per_node)
+        return prog, name
+
+    # -- failure path --------------------------------------------------------
+    def handle_failure(self, failure: Failure, now: float) -> RecoveryOutcome | None:
+        """Run the recovery pipeline for one failure event at virtual ``now``.
+
+        Returns None (and records the failure as unsupported) when R2CCL
+        cannot act on it — out-of-scope types, or non-escalating hard
+        failures; fractional-severity degradations are always handled.
+        """
+        if failure.ftype in OUT_OF_SCOPE:
+            self.failure_state.unsupported.append(failure)
+            return None
+        escalated = failure.severity >= 1.0 and failure.supported
+        if not escalated and failure.severity >= 1.0:
+            self.failure_state.unsupported.append(failure)
+            return None
+
+        if failure.ftype is FailureType.LINK_FLAPPING or failure.recovers_at is not None:
+            key = failure.nic_key
+            self.flap_counts[key] = self.flap_counts.get(key, 0) + 1
+
+        stages: dict[str, float] = {}
+        t = now
+        backup: tuple[int, int] | None = None
+        node_lost = False
+
+        if escalated:
+            # DETECTING: bilateral awareness — CQE error + OOB peer notify.
+            self._transition(t, RecoveryState.DETECTING)
+            src, peer, aux = self._probe_points(failure)
+            diag = self.detector.detect(failure, src, peer, aux)
+            stages["detect"] = diag.detect_latency
+            t += diag.detect_latency
+            # DIAGNOSING: probe triangulation + diagnosis broadcast.
+            self._transition(t, RecoveryState.DIAGNOSING)
+            stages["diagnose"] = diag.localize_latency - diag.detect_latency
+            t += stages["diagnose"]
+            self.failure_state.apply(failure)
+            # MIGRATING: rollback + pre-registered backup-NIC activation.
+            self._transition(t, RecoveryState.MIGRATING)
+            node = self.cluster.nodes[failure.node]
+            table = RegistrationTable(node)
+            device = max(failure.rail, 0)      # affinity: device d <-> rail d
+            chain = table.failover_chain(device, self.failure_state.failed_nics)
+            if chain:
+                backup = chain[0].key
+                stages["migrate"] = ROLLBACK_CPU_COST + table.activation_cost()
+            else:
+                node_lost = True               # every NIC dead: nothing to
+                stages["migrate"] = ROLLBACK_CPU_COST   # migrate onto
+            t += stages["migrate"]
+        else:
+            # Slow NIC: no transport error — the bandwidth monitor catches it.
+            self._transition(t, RecoveryState.DETECTING)
+            stages["detect"] = SLOW_NIC_DETECT_LATENCY
+            t += stages["detect"]
+
+        # REBALANCED: redistribute the detoured flows across healthy NICs.
+        # Only an escalated failure orphans flows onto backup NICs (paying
+        # the PCIe/PXN detour efficiency); a slow NIC keeps its flows — the
+        # water-fill just shifts load shares, which the engine's
+        # severity-scaled capacity already reflects.
+        eff = 1.0
+        if escalated:
+            plan = self._rebalance_plan(failure.node)
+            if plan is not None and plan.completion_time > 0 and \
+                    plan.completion_time != float("inf"):
+                # How close the water-fill gets to the residual-bandwidth
+                # ideal, times the calibrated PCIe/PXN detour efficiency.
+                eff = DETOUR_EFFICIENCY * min(
+                    1.0, plan.completion_time_ideal / plan.completion_time)
+        stages["rebalance"] = REBALANCE_COMPUTE_COST
+        t += stages["rebalance"]
+        self._transition(t, RecoveryState.REBALANCED)
+
+        # REPLANNED: algorithm re-selection when the diagnosis warrants it.
+        prog: CollectiveProgram | None = None
+        strategy: str | None = None
+        need_replan = self.replan_enabled and (
+            node_lost
+            or self.flap_counts.get(failure.nic_key, 0) >= self.flap_replan_threshold
+        )
+        if need_replan:
+            prog, strategy = self._plan_program()
+            stages["replan"] = REPLAN_COMPUTE_COST + BROADCAST_LATENCY
+            t += stages["replan"]
+            self._transition(t, RecoveryState.REPLANNED)
+            self.current_program = prog
+
+        entry = LedgerEntry(
+            failure=failure, t_start=now, stages=stages,
+            state_after=self.state, backup_nic=backup, strategy=strategy,
+            balance_efficiency=eff,
+        )
+        self.ledger.record(entry)
+        scale = {failure.node: eff} if eff < 1.0 else None
+        decision = RecoveryDecision(
+            repair_latency=entry.hot_repair_latency,
+            capacity_scale=scale,
+            replan=prog,
+            replan_delay=entry.total,
+        )
+        return RecoveryOutcome(entry=entry, decision=decision)
+
+    # -- recovery path -------------------------------------------------------
+    def handle_recovery(self, failure: Failure, now: float) -> bool:
+        """Re-probe success for a previously failed component (flap up,
+        repaired NIC).  Returns True when the whole cluster is healthy again
+        — the recovery transition back to HEALTHY."""
+        self.detector.reprobe(failure.nic_key, now, recovered=True)
+        if not self.failure_state.failed_nics:
+            self._transition(now, RecoveryState.HEALTHY)
+            return True
+        return False
+
+    # -- campaign end --------------------------------------------------------
+    def finalize(self, now: float) -> CollectiveProgram | None:
+        """Settle the state machine at the end of a failure campaign.
+
+        Persistent degradation (failed NICs that never re-probed healthy)
+        eventually triggers algorithm re-selection for the *next* collective
+        — so every campaign terminates in HEALTHY or REPLANNED.
+        """
+        if self.failure_state.failed_nics and \
+                self.state is not RecoveryState.REPLANNED and self.replan_enabled:
+            prog, strategy = self._plan_program()
+            stages = {"replan": REPLAN_COMPUTE_COST + BROADCAST_LATENCY}
+            self._transition(now + stages["replan"], RecoveryState.REPLANNED)
+            self.ledger.record(LedgerEntry(
+                failure=None, t_start=now, stages=stages,
+                state_after=self.state, strategy=strategy))
+            self.current_program = prog
+            return prog
+        if not self.failure_state.failed_nics and \
+                self.state is not RecoveryState.HEALTHY and \
+                self.state is not RecoveryState.REPLANNED:
+            self._transition(now, RecoveryState.HEALTHY)
+        return None

@@ -1,0 +1,126 @@
+"""Co-simulation of the recovery control plane with the event engine.
+
+Glue between :class:`runtime.control_plane.ControlPlane` (the online
+pipeline) and :class:`core.event_sim.EventSimulator` (the data plane in
+virtual time): every failure event the engine processes is played through
+the control plane *at that virtual instant*, and the resulting
+:class:`RecoveryDecision` — derived restart delay, rebalance capacity
+factor, optional replanned program — is applied by the engine.  Failover
+latency therefore *emerges* from the detect→diagnose→migrate→rebalance
+pipeline instead of the alpha-beta ``R2CCL_MIGRATION_LATENCY`` constant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.comm_sim import _strategy_program
+from repro.core.event_sim import (
+    EventSimReport,
+    RecoveryDecision,
+    simulate_program,
+)
+from repro.core.failures import FailureState
+from repro.core.schedule import ring_program
+from repro.core.topology import ClusterTopology, DEFAULT_ALPHA
+
+from .control_plane import ControlPlane, RecoveryLedger, RecoveryState
+from .scenarios import Scenario
+
+
+class _EngineAdapter:
+    """The controller object the event engine calls back into."""
+
+    def __init__(self, cp: ControlPlane):
+        self.cp = cp
+        self.decisions: list[RecoveryDecision] = []
+
+    def on_failure(self, sim, now, failure) -> RecoveryDecision | None:
+        outcome = self.cp.handle_failure(failure, now)
+        if outcome is None:
+            return None
+        self.decisions.append(outcome.decision)
+        return outcome.decision
+
+    def on_recover(self, sim, now, failure) -> None:
+        self.cp.handle_recovery(failure, now)
+
+
+@dataclasses.dataclass
+class CoSimReport:
+    """One scenario campaign, co-simulated end to end."""
+
+    scenario: str
+    report: EventSimReport                 # the engine's view
+    ledger: RecoveryLedger                 # the control plane's view
+    final_state: RecoveryState
+    transitions: list[tuple[float, RecoveryState]]
+    stage_totals: dict[str, float]
+    decisions: list[RecoveryDecision]
+    healthy_time: float
+    overhead: float                        # completion vs healthy ring - 1
+
+    @property
+    def failover_latency(self) -> float:
+        """Ledger total of the first recovery pipeline (the paper's
+        hot-repair figure for a clean single failure)."""
+        return self.ledger.entries[0].total if self.ledger.entries else 0.0
+
+
+def run_scenario(
+    scenario: Scenario,
+    cluster: ClusterTopology,
+    payload_bytes: float,
+    *,
+    strategy: str = "ring",
+    alpha: float = DEFAULT_ALPHA,
+    control_plane: ControlPlane | None = None,
+    rank_data: Sequence[np.ndarray] | None = None,
+    healthy_time: float | None = None,
+    finalize: bool = True,
+) -> CoSimReport:
+    """Drive one failure campaign through the co-simulated runtime.
+
+    The initial program is planned against what the control plane knows at
+    t=0 (failures with ``at_time <= 0``); later failures strike
+    mid-collective and exercise the full closed loop.  ``finalize`` settles
+    the state machine at campaign end (persistent degradation → REPLANNED
+    for the next collective, all-healthy → HEALTHY).
+    """
+    n = cluster.num_nodes
+    g = cluster.devices_per_node
+    order = list(range(n))
+
+    cp = control_plane or ControlPlane(cluster, payload_bytes=payload_bytes)
+    pre = FailureState()
+    for f in scenario.failures:
+        if f.at_time <= 0.0 and f.severity >= 1.0:
+            pre.apply(f)
+    prog = _strategy_program(strategy, cluster, pre, g=g)
+
+    if healthy_time is None:
+        healthy_time = simulate_program(
+            ring_program(order, n), payload_bytes, cluster=cluster,
+            alpha=alpha).completion_time
+
+    adapter = _EngineAdapter(cp)
+    report = simulate_program(
+        prog, payload_bytes, cluster=cluster, alpha=alpha,
+        failures=scenario.failures, rank_data=rank_data, controller=adapter)
+    if finalize:
+        cp.finalize(report.completion_time)
+
+    return CoSimReport(
+        scenario=scenario.name,
+        report=report,
+        ledger=cp.ledger,
+        final_state=cp.state,
+        transitions=list(cp.transitions),
+        stage_totals=cp.ledger.stage_totals(),
+        decisions=adapter.decisions,
+        healthy_time=healthy_time,
+        overhead=report.completion_time / healthy_time - 1.0,
+    )

@@ -1,0 +1,172 @@
+"""Timed multi-failure campaign DSL for the recovery runtime.
+
+A :class:`Scenario` is a named list of timed :class:`core.failures.Failure`
+events to inject into one co-simulated collective.  Campaign builders take
+the healthy collective time ``t_h`` so injection points land mid-collective
+regardless of payload/cluster scale, and :func:`parse_campaign` accepts a
+compact textual spec for ad-hoc campaigns from benchmark CLIs and tests::
+
+    nic_down node=1 rail=0 at=0.4; flap node=2 rail=1 at=0.2 down=0.05
+
+Event kinds: ``nic_down`` (hard NIC death), ``flap`` (down then recovers
+after ``down``), ``flaps`` (a storm: ``count`` flaps ``period`` apart),
+``slow`` (bandwidth spectrum point, ``lost`` fraction).  All times are
+fractions of ``t_scale`` (pass the healthy time to express campaign timing
+relative to the collective).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.failures import (
+    Failure,
+    flap_sequence,
+    link_flap,
+    nic_down_at,
+    slow_nic,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named failure-injection campaign."""
+
+    name: str
+    failures: tuple[Failure, ...]
+    note: str = ""
+
+    def __post_init__(self) -> None:
+        object.__setattr__(
+            self, "failures",
+            tuple(sorted(self.failures, key=lambda f: f.at_time)))
+
+
+# ---------------------------------------------------------------------------
+# campaign builders
+# ---------------------------------------------------------------------------
+
+def clean_nic_down(t_h: float, *, node: int = 1, rail: int = 0,
+                   frac: float = 0.4) -> Scenario:
+    """The paper's headline case: one NIC dies mid-collective, hot repair
+    lands it on the backup NIC within the low-millisecond budget."""
+    return Scenario(
+        "clean_nic_down",
+        (nic_down_at(node, rail, frac * t_h),),
+        note="single hard NIC death mid-collective (conformance target)")
+
+
+def correlated_nic_down(t_h: float, *, node: int = 1, rails: tuple[int, ...] = (0, 1),
+                        frac: float = 0.35, stagger: float = 0.01) -> Scenario:
+    """Several NICs of one node die almost together (shared PCIe riser /
+    firmware bug): each loss re-runs the pipeline against a shrinking
+    backup chain."""
+    fails = tuple(
+        nic_down_at(node, r, (frac + i * stagger) * t_h)
+        for i, r in enumerate(rails))
+    return Scenario("correlated_nic_down", fails,
+                    note=f"{len(rails)} rails of node {node} die {stagger:.0%} apart")
+
+
+def flap_storm(t_h: float, *, node: int = 1, rail: int = 0, count: int = 4,
+               start_frac: float = 0.15, period_frac: float = 0.18,
+               down_frac: float = 0.06) -> Scenario:
+    """Repeated link flaps of one NIC; past the flap threshold the control
+    plane stops re-migrating and re-plans the algorithm instead."""
+    fails = tuple(flap_sequence(
+        node, rail, start=start_frac * t_h, period=period_frac * t_h,
+        down_for=down_frac * t_h, count=count))
+    return Scenario("flap_storm", fails,
+                    note=f"{count} flaps, replan after the threshold")
+
+
+def slow_nic_degradation(t_h: float, *, nodes: tuple[int, ...] = (0, 1),
+                         base_lost: float = 0.2, step: float = 0.15,
+                         frac: float = 0.1) -> Scenario:
+    """A bandwidth spectrum: NICs on several nodes degrade (no transport
+    error) — caught by monitoring, handled by rebalance alone."""
+    fails = tuple(
+        slow_nic(nd, 0, frac * t_h, lost_fraction=min(0.9, base_lost + i * step))
+        for i, nd in enumerate(nodes))
+    return Scenario("slow_nic", fails,
+                    note="fractional degradation, monitor-detected")
+
+
+def failure_during_recovery(t_h: float, *, first_node: int = 1,
+                            second_node: int = 2, rail: int = 0,
+                            frac: float = 0.3, gap: float = 0.7e-3) -> Scenario:
+    """A second hard failure strikes while the first one's hot repair is
+    still in flight (rolled-back transfers not yet restarted) — the pipeline
+    must compose, not serialize."""
+    t1 = frac * t_h
+    return Scenario(
+        "failure_during_recovery",
+        (nic_down_at(first_node, rail, t1),
+         nic_down_at(second_node, rail, t1 + gap)),
+        note=f"second failure {gap * 1e3:.1f} ms into the first repair window")
+
+
+def standard_campaigns(t_h: float, *, num_nodes: int, rails: int) -> list[Scenario]:
+    """The benchmark/acceptance campaign set, scaled to the cluster shape."""
+    second = 2 if num_nodes > 2 else 0     # distinct from the first node
+    campaigns = [
+        clean_nic_down(t_h, node=min(1, num_nodes - 1)),
+        flap_storm(t_h, node=min(1, num_nodes - 1)),
+        slow_nic_degradation(t_h, nodes=tuple(range(min(2, num_nodes)))),
+        failure_during_recovery(t_h, first_node=min(1, num_nodes - 1),
+                                second_node=second),
+    ]
+    if rails >= 2:
+        campaigns.insert(1, correlated_nic_down(
+            t_h, node=min(1, num_nodes - 1), rails=(0, 1)))
+    return campaigns
+
+
+# ---------------------------------------------------------------------------
+# textual campaign spec
+# ---------------------------------------------------------------------------
+
+_EVENT_KINDS = ("nic_down", "flap", "flaps", "slow")
+
+
+def parse_campaign(name: str, spec: str, *, t_scale: float = 1.0) -> Scenario:
+    """Parse ``spec`` into a Scenario.
+
+    ``spec`` is ';'-separated events, each ``kind k=v k=v ...``; time-like
+    fields (``at``, ``down``, ``period``) are multiplied by ``t_scale``::
+
+        parse_campaign("mix", "nic_down node=1 rail=0 at=0.4; "
+                              "flaps node=2 rail=1 at=0.1 down=0.05 "
+                              "period=0.2 count=3; "
+                              "slow node=0 rail=0 at=0 lost=0.3", t_scale=t_h)
+    """
+    failures: list[Failure] = []
+    for raw in spec.split(";"):
+        raw = raw.strip()
+        if not raw:
+            continue
+        parts = raw.split()
+        kind, kv = parts[0], {}
+        if kind not in _EVENT_KINDS:
+            raise ValueError(
+                f"unknown event kind {kind!r} (expected one of {_EVENT_KINDS})")
+        for tok in parts[1:]:
+            if "=" not in tok:
+                raise ValueError(f"malformed field {tok!r} in event {raw!r}")
+            k, v = tok.split("=", 1)
+            kv[k] = float(v)
+        node, rail = int(kv.pop("node")), int(kv.pop("rail"))
+        at = kv.pop("at", 0.0) * t_scale
+        if kind == "nic_down":
+            failures.append(nic_down_at(node, rail, at))
+        elif kind == "flap":
+            failures.append(link_flap(node, rail, at, kv.pop("down") * t_scale))
+        elif kind == "flaps":
+            failures.extend(flap_sequence(
+                node, rail, start=at, period=kv.pop("period") * t_scale,
+                down_for=kv.pop("down") * t_scale, count=int(kv.pop("count"))))
+        elif kind == "slow":
+            failures.append(slow_nic(node, rail, at, lost_fraction=kv.pop("lost")))
+        if kv:
+            raise ValueError(f"unexpected fields {sorted(kv)} in event {raw!r}")
+    return Scenario(name, tuple(failures), note=spec)

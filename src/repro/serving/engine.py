@@ -10,11 +10,14 @@ the paper's evaluation strategies:
                    its own load (service rate halves);
   * ``dejavu``   — KV replication: pay the replication overhead always and
                    a reconstruction penalty at failover;
-  * ``r2ccl``    — transparent connection migration: a low-millisecond
-                   hot-repair hiccup, then continue at the residual rate.
+  * ``r2ccl``    — transparent connection migration: the hiccup is the
+                   recovery control plane's per-stage ledger total
+                   (detect → diagnose → migrate → rebalance, from
+                   ``repro.runtime``), then continue at the residual rate.
 
 Compute runs for real (JAX); *network* failure costs are modeled in
-virtual time via ``core.comm_sim`` constants because the container has no
+virtual time via the co-simulated control-plane pipeline (r2ccl) and
+``core.comm_sim`` constants (the baselines) because the container has no
 NICs to kill — the same split as the paper's simulator experiments.
 """
 
@@ -36,7 +39,9 @@ from repro.core.comm_sim import (
     strategy_rate,
 )
 from repro.core.failures import Failure, FailureState
+from repro.core.topology import make_cluster
 from repro.models import apply_model, init_caches
+from repro.runtime.control_plane import ControlPlane, LedgerEntry
 
 
 @dataclasses.dataclass
@@ -93,6 +98,15 @@ class ServingEngine:
         self.failovers = 0
         # steady-state replication tax for DejaVu-style KV streaming
         self.dejavu_tax = float(np.mean(DEJAVU_OVERHEAD_RANGE))
+        # The r2ccl hiccup is the recovery pipeline's ledger total, derived
+        # per failure on this replica's node span (TP stays intra-node, so
+        # the replica spans pp nodes; shared FailureState so the control
+        # plane sees what the engine sees).  Serving has no collective
+        # program to swap, so replanning is off.
+        self.control_plane = ControlPlane(
+            make_cluster(max(2, pp), nics_per_node), replan=False,
+            state=self.failure_state)
+        self.last_recovery: LedgerEntry | None = None
 
     # -- failure plumbing ---------------------------------------------------
     def inject_failure(self, failure: Failure) -> bool:
@@ -155,7 +169,17 @@ class ServingEngine:
                     vtime += sum(decode_times) * 0.25  # reconstruct un-replicated tail
                     failovers += 1
                 elif can_continue:                     # r2ccl hot repair
-                    vtime += R2CCL_MIGRATION_LATENCY
+                    # Run the detect→diagnose→migrate→rebalance pipeline:
+                    # the hiccup is its ledger total, not a constant.
+                    outcome = None
+                    if 0 <= failure.node < len(self.control_plane.cluster.nodes):
+                        outcome = self.control_plane.handle_failure(
+                            failure, vtime)
+                    if outcome is not None:
+                        self.last_recovery = outcome.entry
+                        vtime += outcome.entry.total
+                    else:          # outside this replica / out-of-pipeline
+                        vtime += R2CCL_MIGRATION_LATENCY
                     rate = self._degraded_rate()
                     failovers += 1
             t0 = time.perf_counter()

@@ -1,0 +1,30 @@
+"""Failure model: severity domain validation (regression).
+
+Severities outside (0, 1] used to be silently accepted and then
+misinterpreted by the slow-NIC bandwidth spectrum (a severity of 1.5 would
+subtract more than the rail's bandwidth; 0 or negative meant "failure that
+removes nothing").  Construction now rejects them.
+"""
+
+import pytest
+
+from repro.core.failures import Failure, FailureType, nic_down_at, slow_nic
+
+
+def test_severity_one_and_fractional_accepted():
+    assert Failure(FailureType.NIC_HARDWARE, 0, 0).severity == 1.0
+    f = Failure(FailureType.SLOW_NIC, 1, 2, escalates=False, severity=0.25)
+    assert f.severity == 0.25
+    assert nic_down_at(0, 0, 1.0).severity == 1.0
+    assert slow_nic(0, 0, 0.0, lost_fraction=0.5).severity == 0.5
+
+
+@pytest.mark.parametrize("bad", [0.0, -0.5, 1.0001, 2.0, float("inf")])
+def test_severity_out_of_domain_rejected(bad):
+    with pytest.raises(ValueError, match="severity"):
+        Failure(FailureType.SLOW_NIC, 0, 0, escalates=False, severity=bad)
+
+
+def test_nan_severity_rejected():
+    with pytest.raises(ValueError, match="severity"):
+        Failure(FailureType.NIC_HARDWARE, 0, 0, severity=float("nan"))

@@ -63,6 +63,26 @@ def test_unsupported_failure_rejected(setup):
     assert len(eng.failure_state.unsupported) == 1
 
 
+def test_r2ccl_hiccup_is_control_plane_ledger(setup):
+    """The r2ccl failover hiccup is the recovery pipeline's ledger total,
+    and a failure on a node outside the replica's span falls back to the
+    constant instead of crashing (regression: used to IndexError)."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, context_len=64, strategy="r2ccl")
+    assert len(eng.control_plane.cluster.nodes) == 2    # pp=2 replica span
+    fail = Failure(FailureType.NIC_HARDWARE, 1, 0)
+    res = eng.run_batch(_reqs(cfg), fail_at_step=2, failure=fail)
+    assert res[0].failovers == 1
+    assert eng.last_recovery is not None
+    assert eng.last_recovery.total == sum(eng.last_recovery.stages.values())
+    # out-of-replica node: constant-hiccup fallback, no crash
+    eng2 = ServingEngine(cfg, params, context_len=64, strategy="r2ccl")
+    far = Failure(FailureType.NIC_HARDWARE, 5, 0)
+    res2 = eng2.run_batch(_reqs(cfg), fail_at_step=2, failure=far)
+    assert res2[0].failovers == 1
+    assert eng2.last_recovery is None
+
+
 def test_ttft_before_tpot(setup):
     cfg, params = setup
     eng = ServingEngine(cfg, params, context_len=64, strategy="r2ccl")
