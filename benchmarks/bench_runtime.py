@@ -18,7 +18,13 @@ from repro.core.event_sim import simulate_program
 from repro.core.failures import random_failures
 from repro.core.schedule import ring_program
 from repro.core.topology import make_cluster
-from repro.runtime import Scenario, run_scenario, standard_campaigns
+from repro.runtime import (
+    Scenario,
+    run_campaign,
+    run_scenario,
+    standard_campaigns,
+    standard_training_campaigns,
+)
 
 from .common import Reporter
 
@@ -64,6 +70,20 @@ def run(tiny: bool = False, seed: int = 0) -> None:
     r.row("clean_failover_vs_alpha_beta_constant", ratio,
           f"{clean.failover_latency * 1e3:.3f}ms vs "
           f"{R2CCL_MIGRATION_LATENCY * 1e3:.1f}ms; must be within 2x")
+
+    # --- multi-iteration campaign sweep (paper Figs. 7-10 unit) -------------
+    # N gradient syncs back-to-back through ONE persistent control plane:
+    # flap counts, capacity factors, and replanned programs carry across
+    # iterations, and the per-campaign recovery cost is the ledger total.
+    iters = 3 if tiny else 8
+    for tc in standard_training_campaigns(t_h, iterations=iters,
+                                          num_nodes=servers):
+        crep = run_campaign(tc, cluster, payload, healthy_time=t_h)
+        r.row(f"{tc.name}_overhead", crep.overhead,
+              f"{iters} iterations; ledger={crep.recovery_cost:.3g}s "
+              f"replans={crep.replans} state={crep.final_state.value}")
+        r.row(f"{tc.name}_ledger_total", crep.recovery_cost,
+              f"{len(crep.ledger.entries)} pipeline runs across the campaign")
     r.save()
 
 

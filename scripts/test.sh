@@ -5,6 +5,11 @@
 #   scripts/test.sh --all        # everything, including @slow
 #   scripts/test.sh <pytest args...>   # passed through verbatim
 #
+# The fast tier includes the multi-iteration campaign path on every push:
+# tests/test_campaign.py (persistent-control-plane semantics) and the tiny
+# campaign bench smoke (tests/test_bench_smoke.py::test_training_bench_tiny_campaign
+# and ::test_runtime_bench_tiny_campaign_sweep — 3 iterations, 1 failure).
+#
 # Property tests run offline via tests/_propcheck.py when hypothesis is not
 # installed; install requirements-dev.txt to use the real library.
 set -euo pipefail

@@ -34,7 +34,31 @@ PROBE_RTT = 10e-6               # zero-byte RDMA write completion
 PROBE_TIMEOUT = 1e-3            # probe declared lost after this long
 BROADCAST_LATENCY = 100e-6      # OOB broadcast of the diagnosis to all ranks
 NCCL_DEFAULT_TIMEOUT = 120.0    # what the peer would wait without bilateral awareness
-REPROBE_PERIOD = 1.0            # recovery re-probing cadence
+REPROBE_PERIOD = 1.0            # base recovery re-probing cadence
+REPROBE_PERIOD_MIN = 0.25       # stable links re-probe this fast (cadence floor)
+REPROBE_PERIOD_MAX = 8.0        # flappy links back off to at most this (ceiling)
+
+
+def adaptive_reprobe_period(
+    recent_flaps: int,
+    *,
+    base: float = REPROBE_PERIOD,
+    floor: float = REPROBE_PERIOD_MIN,
+    ceiling: float = REPROBE_PERIOD_MAX,
+) -> float:
+    """Re-probe cadence adapted to the observed flap history of a NIC.
+
+    The paper adapts probe frequency to observed failure/recovery patterns:
+    a link with no recent flaps is probed *faster* than the base cadence
+    (recovery detection latency shrinks on stable links), while each recent
+    flap doubles the period (a flapping link is not trusted the instant it
+    answers one probe).  Clamped to [floor, ceiling] so a flap storm cannot
+    silence re-probing and a quiet link cannot busy-poll.
+    """
+    if recent_flaps < 0:
+        raise ValueError(f"recent_flaps must be >= 0, got {recent_flaps}")
+    period = base * 2.0 ** (recent_flaps - 1)
+    return min(max(period, floor), ceiling)
 
 
 class FaultLocation(enum.Enum):
@@ -219,14 +243,17 @@ class FailureDetector:
 
     # -- recovery re-probing -------------------------------------------------
     def reprobe(self, nic: tuple[int, int], now: float,
-                recovered: bool) -> tuple[bool, float]:
+                recovered: bool, flap_count: int = 0) -> tuple[bool, float]:
         """Periodic health re-probe of a previously failed component.
 
-        Returns (healthy_again, next_probe_time).  The cadence backs off is
-        left constant (paper: 'adapting probe frequency based on observed
-        failure and recovery patterns' — we expose the knob).
+        Returns (healthy_again, next_probe_time).  ``flap_count`` is the
+        caller's recent-flap observation for this NIC (the control plane's
+        sliding window); the cadence adapts to it — stable links are probed
+        faster than the base period, flappy links back off exponentially
+        between the floor and ceiling (the paper's 'adapting probe frequency
+        based on observed failure and recovery patterns').
         """
         self._emit(now, "reprobe", f"{nic} -> {'ok' if recovered else 'still_down'}")
         if recovered:
             self.state.recover(nic)
-        return recovered, now + REPROBE_PERIOD
+        return recovered, now + adaptive_reprobe_period(flap_count)

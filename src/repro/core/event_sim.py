@@ -198,6 +198,23 @@ class _Capacities:
         """Install a residual-capacity factor tied to ``failure``'s lifetime."""
         self._scale[rank][failure] = factor
 
+    def active(self) -> dict[Failure, dict[int, float]]:
+        """Degradations still installed: failure -> {rank: scale factor}.
+
+        A failure with no control-plane capacity factor maps to an empty
+        dict.  This is what a campaign runner carries into the next
+        collective's engine so persistent failures keep degrading capacity
+        across run boundaries.
+        """
+        out: dict[Failure, dict[int, float]] = {}
+        for lost in self._lost:
+            for f in lost:
+                out.setdefault(f, {})
+        for rank, scales in enumerate(self._scale):
+            for f, factor in scales.items():
+                out.setdefault(f, {})[rank] = factor
+        return out
+
     def capacity(self, rank: int) -> float:
         # a rail's loss is the worst active degradation on it (a dead NIC is
         # dead; a concurrent slow-NIC event on the same rail adds nothing)
@@ -257,6 +274,8 @@ class EventSimulator:
         rank_data: Sequence[np.ndarray] | None = None,
         repair_latency: float = DEFAULT_REPAIR_LATENCY,
         controller: object | None = None,
+        initial_failures: Sequence[
+            tuple[Failure, Mapping[int, float] | None]] = (),
     ):
         prog.validate()
         self.prog = prog
@@ -290,6 +309,21 @@ class EventSimulator:
         # event queue: (time, seq, kind, arg)
         self._events: list[tuple[float, int, str, object]] = []
         self._seq = 0
+        # Degradations carried over from a previous collective (a training
+        # campaign's earlier iteration): installed before t=0 with their
+        # control-plane capacity factors, WITHOUT consulting the controller
+        # again (the pipeline already ran when the failure first struck) and
+        # without rollback (nothing is in flight yet).  A pending recovery
+        # (``recovers_at``, already rebased to this run's clock) is scheduled
+        # so a flap spanning the boundary still comes back up.
+        for f, scales in initial_failures:
+            self._check_target(f)
+            self.caps.fail(f.node, f)
+            if scales:
+                for r, factor in scales.items():
+                    self.caps.scale(r, f, factor)
+            if f.recovers_at is not None:
+                self._push(f.recovers_at, "recover", f)
         for f in failures:
             # NIC-level events only: hard failures R2CCL can see (supported /
             # escalated) or fractional degradations (slow NIC).  Out-of-scope
@@ -299,14 +333,7 @@ class EventSimulator:
                 continue
             if not (f.supported or f.severity < 1.0):
                 continue
-            if not 0 <= f.node < prog.n:
-                raise EventSimError(
-                    f"failure targets node {f.node} but the program has "
-                    f"ranks 0..{prog.n - 1}: {f}")
-            if not 0 <= f.rail < self.caps.num_rails(f.node):
-                raise EventSimError(
-                    f"failure targets rail {f.rail} but node {f.node} has "
-                    f"rails 0..{self.caps.num_rails(f.node) - 1}: {f}")
+            self._check_target(f)
             self._push(f.at_time, "fail", f)
             if f.recovers_at is not None:
                 self._push(f.recovers_at, "recover", f)
@@ -324,6 +351,16 @@ class EventSimulator:
         self.segment_finish = [0.0] * len(prog.segments)
 
     # -- construction --------------------------------------------------------
+    def _check_target(self, f: Failure) -> None:
+        if not 0 <= f.node < self.prog.n:
+            raise EventSimError(
+                f"failure targets node {f.node} but the program has "
+                f"ranks 0..{self.prog.n - 1}: {f}")
+        if not 0 <= f.rail < self.caps.num_rails(f.node):
+            raise EventSimError(
+                f"failure targets rail {f.rail} but node {f.node} has "
+                f"rails 0..{self.caps.num_rails(f.node) - 1}: {f}")
+
     def _push(self, t: float, kind: str, arg: object) -> None:
         heapq.heappush(self._events, (t, self._seq, kind, arg))
         self._seq += 1
@@ -576,6 +613,15 @@ class EventSimulator:
             if t.deps == 0:
                 self._release(now, t)
 
+    # -- cross-run state -----------------------------------------------------
+    def active_degradations(self) -> list[tuple[Failure, dict[int, float]]]:
+        """Failures still degrading capacity when the run ended, with the
+        control-plane capacity factors installed for each: what a campaign
+        runner must carry into the next collective's ``initial_failures``.
+        Deterministically ordered by (at_time, node, rail)."""
+        return sorted(self.caps.active().items(),
+                      key=lambda kv: (kv[0].at_time, kv[0].node, kv[0].rail))
+
     # -- main loop -----------------------------------------------------------
     def run(self) -> EventSimReport:
         now = 0.0
@@ -687,6 +733,7 @@ def simulate_program(
     rank_data: Sequence[np.ndarray] | None = None,
     repair_latency: float = DEFAULT_REPAIR_LATENCY,
     controller: object | None = None,
+    initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
 ) -> EventSimReport:
     """Execute ``prog`` on the discrete-event engine.
 
@@ -698,11 +745,15 @@ def simulate_program(
     the failed rail.  ``controller`` co-simulates an online recovery
     control plane (see :mod:`repro.runtime`): its per-failure pipeline
     replaces ``repair_latency`` and may replan mid-collective.
+    ``initial_failures`` installs degradations carried over from a previous
+    collective (with their control-plane capacity factors) before t=0,
+    without re-running the pipeline — the campaign-runner handoff.
     """
     return EventSimulator(
         prog, total_bytes, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, rank_data=rank_data,
         repair_latency=repair_latency, controller=controller,
+        initial_failures=initial_failures,
     ).run()
 
 

@@ -5,9 +5,20 @@
                   balance / planner models, with a per-stage latency ledger
   cosim         — co-simulation with core.event_sim (failover latency is
                   derived from the pipeline, not a constant)
-  scenarios     — timed multi-failure campaign DSL (builders + text spec)
+  scenarios     — timed multi-failure campaign DSL (builders + text spec),
+                  single-collective and iteration-indexed (TrainingCampaign)
+  campaign      — multi-iteration training campaign runner: N gradient syncs
+                  back-to-back through ONE persistent control plane, with
+                  ledger-derived recovery costs
 """
 
+from .campaign import (  # noqa: F401
+    CampaignReport,
+    IterationReport,
+    TrainingCampaignResult,
+    run_campaign,
+    training_campaign_report,
+)
 from .control_plane import (  # noqa: F401
     ControlPlane,
     LedgerEntry,
@@ -19,11 +30,19 @@ from .control_plane import (  # noqa: F401
 from .cosim import CoSimReport, run_scenario  # noqa: F401
 from .scenarios import (  # noqa: F401
     Scenario,
+    TrainingCampaign,
+    at_chunk,
+    at_iteration,
+    campaign_clean_nic_down,
+    campaign_flap_storm,
+    campaign_slow_nic,
     clean_nic_down,
     correlated_nic_down,
     failure_during_recovery,
     flap_storm,
     parse_campaign,
+    parse_training_campaign,
     slow_nic_degradation,
     standard_campaigns,
+    standard_training_campaigns,
 )

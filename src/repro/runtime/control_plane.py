@@ -29,7 +29,11 @@ import enum
 
 from repro.core.balance import BalancePlan, rebalance
 from repro.core.comm_sim import DETOUR_EFFICIENCY, _strategy_program
-from repro.core.detection import BROADCAST_LATENCY, FailureDetector
+from repro.core.detection import (
+    BROADCAST_LATENCY,
+    FailureDetector,
+    adaptive_reprobe_period,
+)
 from repro.core.event_sim import RecoveryDecision
 from repro.core.failures import OUT_OF_SCOPE, Failure, FailureState, FailureType
 from repro.core.migration import ROLLBACK_CPU_COST, RegistrationTable
@@ -50,6 +54,11 @@ SLOW_NIC_DETECT_LATENCY = 500e-6
 #: Repeated flaps of the same NIC within one collective trigger algorithm
 #: re-selection (the paper's "adapting to observed failure patterns").
 DEFAULT_FLAP_REPLAN_THRESHOLD = 3
+#: Sliding window (seconds of virtual time) over which flaps count toward the
+#: replan threshold and the adaptive re-probe cadence.  Without it one
+#: historical flap storm would push every later failure on that NIC over the
+#: threshold forever; with it the threshold reflects *recent* flapping only.
+DEFAULT_FLAP_WINDOW = 30.0
 
 
 class RecoveryState(enum.Enum):
@@ -129,6 +138,7 @@ class ControlPlane:
         payload_bytes: float = float(1 << 26),
         collective: Collective = Collective.ALL_REDUCE,
         flap_replan_threshold: int = DEFAULT_FLAP_REPLAN_THRESHOLD,
+        flap_window: float = DEFAULT_FLAP_WINDOW,
         replan: bool = True,
         state: FailureState | None = None,
     ):
@@ -136,6 +146,7 @@ class ControlPlane:
         self.payload_bytes = float(payload_bytes)
         self.collective = collective
         self.flap_replan_threshold = flap_replan_threshold
+        self.flap_window = float(flap_window)
         self.replan_enabled = replan
         self.failure_state = state if state is not None else FailureState()
         self.detector = FailureDetector(self.failure_state)
@@ -144,8 +155,38 @@ class ControlPlane:
         self.state = RecoveryState.HEALTHY
         self.transitions: list[tuple[float, RecoveryState]] = [
             (0.0, RecoveryState.HEALTHY)]
+        #: all-time flap totals per NIC (observability); decisions use the
+        #: sliding-window timestamps below, never this monotonic counter
         self.flap_counts: dict[tuple[int, int], int] = {}
+        #: virtual-time stamps of each NIC's flaps, pruned to ``flap_window``
+        self.flap_history: dict[tuple[int, int], list[float]] = {}
+        #: next scheduled re-probe per recovered NIC (adaptive cadence)
+        self.next_reprobe: dict[tuple[int, int], float] = {}
         self.current_program: CollectiveProgram | None = None
+
+    # -- flap bookkeeping ----------------------------------------------------
+    def _record_flap(self, key: tuple[int, int], now: float) -> None:
+        self.flap_counts[key] = self.flap_counts.get(key, 0) + 1
+        hist = self.flap_history.setdefault(key, [])
+        hist.append(now)
+        # prune at record time only, so the history cannot grow without
+        # bound; reads never mutate (a query with a later ``now`` must not
+        # discard history a subsequent replan decision still needs)
+        cutoff = now - self.flap_window
+        while hist and hist[0] < cutoff:
+            hist.pop(0)
+
+    def recent_flaps(self, key: tuple[int, int], now: float) -> int:
+        """Flaps of ``key`` within the sliding window ending at ``now``.
+        Read-only: does not prune the history."""
+        cutoff = now - self.flap_window
+        return sum(1 for t in self.flap_history.get(key, ()) if t >= cutoff)
+
+    def reprobe_period(self, key: tuple[int, int], now: float) -> float:
+        """Adaptive re-probe cadence for ``key``: recent flaps back the
+        period off exponentially; stable links probe faster than the base
+        constant (floor/ceiling in :mod:`core.detection`)."""
+        return adaptive_reprobe_period(self.recent_flaps(key, now))
 
     # -- state machine plumbing ---------------------------------------------
     def _transition(self, t: float, state: RecoveryState) -> None:
@@ -218,8 +259,7 @@ class ControlPlane:
             return None
 
         if failure.ftype is FailureType.LINK_FLAPPING or failure.recovers_at is not None:
-            key = failure.nic_key
-            self.flap_counts[key] = self.flap_counts.get(key, 0) + 1
+            self._record_flap(failure.nic_key, now)
 
         stages: dict[str, float] = {}
         t = now
@@ -280,7 +320,7 @@ class ControlPlane:
         strategy: str | None = None
         need_replan = self.replan_enabled and (
             node_lost
-            or self.flap_counts.get(failure.nic_key, 0) >= self.flap_replan_threshold
+            or self.recent_flaps(failure.nic_key, now) >= self.flap_replan_threshold
         )
         if need_replan:
             prog, strategy = self._plan_program()
@@ -308,9 +348,23 @@ class ControlPlane:
     def handle_recovery(self, failure: Failure, now: float) -> bool:
         """Re-probe success for a previously failed component (flap up,
         repaired NIC).  Returns True when the whole cluster is healthy again
-        — the recovery transition back to HEALTHY."""
-        self.detector.reprobe(failure.nic_key, now, recovered=True)
+        — the recovery transition back to HEALTHY.  The next re-probe of
+        this NIC is scheduled at the adaptive cadence: fast on stable links,
+        backed off exponentially for recent flappers."""
+        key = failure.nic_key
+        _, next_probe = self.detector.reprobe(
+            key, now, recovered=True,
+            flap_count=self.recent_flaps(key, now))
+        self.next_reprobe[key] = next_probe
         if not self.failure_state.failed_nics:
+            # Fully healthy again: a replanned program was a reaction to
+            # degradation that no longer exists, so the next collective goes
+            # back to the baseline algorithm — UNLESS this NIC is still a
+            # known flapper (recent flaps at/over the threshold): then the
+            # adaptation stays until the flap window drains (the paper's
+            # "adapting to observed failure patterns").
+            if self.recent_flaps(key, now) < self.flap_replan_threshold:
+                self.current_program = None
             self._transition(now, RecoveryState.HEALTHY)
             return True
         return False

@@ -32,21 +32,49 @@ from .scenarios import Scenario
 
 
 class _EngineAdapter:
-    """The controller object the event engine calls back into."""
+    """The controller object the event engine calls back into.
 
-    def __init__(self, cp: ControlPlane):
+    ``offset`` rebases the engine's run-local clock onto campaign time: a
+    multi-iteration campaign runs one engine per gradient sync, each
+    starting at t=0, while the persistent control plane's ledger and
+    transitions are stamped in campaign-global virtual time.
+    """
+
+    def __init__(self, cp: ControlPlane, offset: float = 0.0):
         self.cp = cp
+        self.offset = offset
         self.decisions: list[RecoveryDecision] = []
 
     def on_failure(self, sim, now, failure) -> RecoveryDecision | None:
-        outcome = self.cp.handle_failure(failure, now)
+        outcome = self.cp.handle_failure(failure, self.offset + now)
         if outcome is None:
             return None
         self.decisions.append(outcome.decision)
         return outcome.decision
 
     def on_recover(self, sim, now, failure) -> None:
-        self.cp.handle_recovery(failure, now)
+        self.cp.handle_recovery(failure, self.offset + now)
+
+
+def plan_initial_program(
+    strategy: str,
+    cluster: ClusterTopology,
+    failures,
+    *,
+    g: int,
+    state: FailureState | None = None,
+):
+    """The t=0 program: ``strategy`` planned against what the control plane
+    knows before the collective starts — ``state`` (carried over from
+    earlier collectives, if any) plus failures already in effect (``at_time
+    <= 0`` and full severity).  Single planning rule for the one-collective
+    (:func:`run_scenario`) and campaign (:mod:`runtime.campaign`) paths so
+    they cannot diverge."""
+    pre = state.copy() if state is not None else FailureState()
+    for f in failures:
+        if f.at_time <= 0.0 and f.severity >= 1.0:
+            pre.apply(f)
+    return _strategy_program(strategy, cluster, pre, g=g)
 
 
 @dataclasses.dataclass
@@ -95,11 +123,7 @@ def run_scenario(
     order = list(range(n))
 
     cp = control_plane or ControlPlane(cluster, payload_bytes=payload_bytes)
-    pre = FailureState()
-    for f in scenario.failures:
-        if f.at_time <= 0.0 and f.severity >= 1.0:
-            pre.apply(f)
-    prog = _strategy_program(strategy, cluster, pre, g=g)
+    prog = plan_initial_program(strategy, cluster, scenario.failures, g=g)
 
     if healthy_time is None:
         healthy_time = simulate_program(

@@ -13,6 +13,15 @@ after ``down``), ``flaps`` (a storm: ``count`` flaps ``period`` apart),
 ``slow`` (bandwidth spectrum point, ``lost`` fraction).  All times are
 fractions of ``t_scale`` (pass the healthy time to express campaign timing
 relative to the collective).
+
+A :class:`TrainingCampaign` lifts the same events to *multi-iteration*
+training runs (the paper's Figs. 7-10 measurement unit): each failure is
+placed at (iteration ``k``, iteration-local time), optionally at chunk
+granularity via :func:`at_chunk`, and the campaign runner in
+:mod:`runtime.campaign` executes the gradient syncs back-to-back through
+one persistent control plane.  The text spec grows an ``iter=`` field::
+
+    nic_down node=1 rail=0 iter=3 at=0.4; flap node=2 rail=1 iter=5 at=0.2 down=0.05
 """
 
 from __future__ import annotations
@@ -40,6 +49,55 @@ class Scenario:
         object.__setattr__(
             self, "failures",
             tuple(sorted(self.failures, key=lambda f: f.at_time)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainingCampaign:
+    """A multi-iteration failure campaign: N gradient syncs back-to-back.
+
+    ``events`` are (iteration, failure) pairs; each failure's ``at_time`` is
+    *iteration-local* (seconds into that iteration's collective, typically
+    expressed as a fraction of the healthy collective time ``t_h``).  The
+    campaign runner (:func:`runtime.campaign.run_campaign`) drives one
+    persistent control plane across all iterations, so flap counts,
+    capacity factors, and replanned programs carry over."""
+
+    name: str
+    iterations: int
+    events: tuple[tuple[int, Failure], ...]
+    note: str = ""
+
+    def __post_init__(self) -> None:
+        if self.iterations < 1:
+            raise ValueError(f"need >= 1 iteration, got {self.iterations}")
+        for k, f in self.events:
+            if not 0 <= k < self.iterations:
+                raise ValueError(
+                    f"event at iteration {k} outside campaign of "
+                    f"{self.iterations} iterations: {f}")
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(self.events, key=lambda kf: (kf[0], kf[1].at_time))))
+
+    def failures_for(self, iteration: int) -> tuple[Failure, ...]:
+        """The failures striking during ``iteration``, in injection order."""
+        return tuple(f for k, f in self.events if k == iteration)
+
+
+def at_iteration(iteration: int, failure: Failure) -> tuple[int, Failure]:
+    """Place ``failure`` (iteration-local ``at_time``) at gradient sync
+    ``iteration`` of a :class:`TrainingCampaign`."""
+    return (iteration, failure)
+
+
+def at_chunk(t_h: float, chunk: int, num_chunks: int) -> float:
+    """Iteration-local injection time at which chunk ``chunk`` of
+    ``num_chunks`` is in flight — chunk-granularity failure placement
+    ("fail at iteration k, chunk c") assuming chunks stream uniformly over
+    the healthy collective time ``t_h``."""
+    if not 0 <= chunk < num_chunks:
+        raise ValueError(f"chunk {chunk} outside 0..{num_chunks - 1}")
+    return t_h * (chunk + 0.5) / num_chunks
 
 
 # ---------------------------------------------------------------------------
@@ -123,24 +181,85 @@ def standard_campaigns(t_h: float, *, num_nodes: int, rails: int) -> list[Scenar
 
 
 # ---------------------------------------------------------------------------
+# training-campaign builders (multi-iteration)
+# ---------------------------------------------------------------------------
+
+def campaign_clean_nic_down(
+    t_h: float, *, iterations: int = 8, fail_iteration: int | None = None,
+    node: int = 1, rail: int = 0, frac: float = 0.4,
+) -> TrainingCampaign:
+    """The acceptance scenario: one NIC dies mid-collective at a
+    mid-campaign gradient sync and stays dead; every later iteration runs
+    on the control plane's carried-over state."""
+    k = iterations // 2 if fail_iteration is None else fail_iteration
+    return TrainingCampaign(
+        "campaign_clean_nic_down", iterations,
+        (at_iteration(k, nic_down_at(node, rail, frac * t_h)),),
+        note=f"NIC ({node},{rail}) down at iteration {k}, {frac:.0%} in")
+
+
+def campaign_flap_storm(
+    t_h: float, *, iterations: int = 6, node: int = 1, rail: int = 0,
+    start_iteration: int = 1, count: int = 4, frac: float = 0.2,
+    down_frac: float = 0.05,
+) -> TrainingCampaign:
+    """One flap per iteration for ``count`` consecutive iterations: the
+    flap window spans gradient syncs, so the replan decision depends on the
+    control plane persisting across them."""
+    events = tuple(
+        at_iteration(start_iteration + i,
+                     link_flap(node, rail, frac * t_h, down_frac * t_h))
+        for i in range(count))
+    return TrainingCampaign(
+        "campaign_flap_storm", iterations, events,
+        note=f"{count} flaps of ({node},{rail}), one per iteration")
+
+
+def campaign_slow_nic(
+    t_h: float, *, iterations: int = 6, node: int = 0, rail: int = 0,
+    fail_iteration: int = 2, lost: float = 0.3, frac: float = 0.1,
+) -> TrainingCampaign:
+    """Monitor-detected fractional degradation mid-campaign: no rollback,
+    but the residual rate carries into every later iteration."""
+    return TrainingCampaign(
+        "campaign_slow_nic", iterations,
+        (at_iteration(fail_iteration,
+                      slow_nic(node, rail, frac * t_h, lost_fraction=lost)),),
+        note=f"NIC ({node},{rail}) loses {lost:.0%} bw at iteration "
+             f"{fail_iteration}")
+
+
+def standard_training_campaigns(
+    t_h: float, *, iterations: int, num_nodes: int,
+) -> list[TrainingCampaign]:
+    """The multi-iteration benchmark set (paper Figs. 7-10 sweep), scaled
+    to the cluster shape."""
+    node = min(1, num_nodes - 1)
+    return [
+        campaign_clean_nic_down(t_h, iterations=iterations, node=node),
+        campaign_flap_storm(
+            t_h, iterations=iterations, node=node,
+            start_iteration=min(1, iterations - 1),
+            count=min(4, iterations - 1) or 1),
+        campaign_slow_nic(t_h, iterations=iterations,
+                          fail_iteration=min(2, iterations - 1)),
+    ]
+
+
+# ---------------------------------------------------------------------------
 # textual campaign spec
 # ---------------------------------------------------------------------------
 
 _EVENT_KINDS = ("nic_down", "flap", "flaps", "slow")
 
 
-def parse_campaign(name: str, spec: str, *, t_scale: float = 1.0) -> Scenario:
-    """Parse ``spec`` into a Scenario.
-
-    ``spec`` is ';'-separated events, each ``kind k=v k=v ...``; time-like
-    fields (``at``, ``down``, ``period``) are multiplied by ``t_scale``::
-
-        parse_campaign("mix", "nic_down node=1 rail=0 at=0.4; "
-                              "flaps node=2 rail=1 at=0.1 down=0.05 "
-                              "period=0.2 count=3; "
-                              "slow node=0 rail=0 at=0 lost=0.3", t_scale=t_h)
-    """
-    failures: list[Failure] = []
+def _parse_events(
+    spec: str, t_scale: float, *, allow_iter: bool,
+) -> list[tuple[int, Failure]]:
+    """Shared grammar: ';'-separated ``kind k=v ...`` events.  Returns
+    (iteration, failure) pairs; ``iter=`` is only legal when ``allow_iter``
+    (the single-collective :func:`parse_campaign` has no iterations)."""
+    events: list[tuple[int, Failure]] = []
     for raw in spec.split(";"):
         raw = raw.strip()
         if not raw:
@@ -156,17 +275,54 @@ def parse_campaign(name: str, spec: str, *, t_scale: float = 1.0) -> Scenario:
             k, v = tok.split("=", 1)
             kv[k] = float(v)
         node, rail = int(kv.pop("node")), int(kv.pop("rail"))
+        if "iter" in kv and not allow_iter:
+            raise ValueError(
+                f"iter= is only valid in a training-campaign spec "
+                f"(parse_training_campaign): {raw!r}")
+        it = int(kv.pop("iter", 0))
         at = kv.pop("at", 0.0) * t_scale
         if kind == "nic_down":
-            failures.append(nic_down_at(node, rail, at))
+            events.append((it, nic_down_at(node, rail, at)))
         elif kind == "flap":
-            failures.append(link_flap(node, rail, at, kv.pop("down") * t_scale))
+            events.append((it, link_flap(node, rail, at,
+                                         kv.pop("down") * t_scale)))
         elif kind == "flaps":
-            failures.extend(flap_sequence(
+            events.extend((it, f) for f in flap_sequence(
                 node, rail, start=at, period=kv.pop("period") * t_scale,
                 down_for=kv.pop("down") * t_scale, count=int(kv.pop("count"))))
         elif kind == "slow":
-            failures.append(slow_nic(node, rail, at, lost_fraction=kv.pop("lost")))
+            events.append((it, slow_nic(node, rail, at,
+                                        lost_fraction=kv.pop("lost"))))
         if kv:
             raise ValueError(f"unexpected fields {sorted(kv)} in event {raw!r}")
-    return Scenario(name, tuple(failures), note=spec)
+    return events
+
+
+def parse_campaign(name: str, spec: str, *, t_scale: float = 1.0) -> Scenario:
+    """Parse ``spec`` into a Scenario.
+
+    ``spec`` is ';'-separated events, each ``kind k=v k=v ...``; time-like
+    fields (``at``, ``down``, ``period``) are multiplied by ``t_scale``::
+
+        parse_campaign("mix", "nic_down node=1 rail=0 at=0.4; "
+                              "flaps node=2 rail=1 at=0.1 down=0.05 "
+                              "period=0.2 count=3; "
+                              "slow node=0 rail=0 at=0 lost=0.3", t_scale=t_h)
+    """
+    events = _parse_events(spec, t_scale, allow_iter=False)
+    return Scenario(name, tuple(f for _, f in events), note=spec)
+
+
+def parse_training_campaign(
+    name: str, spec: str, *, iterations: int, t_scale: float = 1.0,
+) -> TrainingCampaign:
+    """Parse the same grammar into a :class:`TrainingCampaign`; each event
+    takes an optional ``iter=k`` (default 0) placing it at gradient sync
+    ``k``, with ``at`` still iteration-local::
+
+        parse_training_campaign(
+            "mid", "nic_down node=1 rail=0 iter=4 at=0.4",
+            iterations=8, t_scale=t_h)
+    """
+    events = _parse_events(spec, t_scale, allow_iter=True)
+    return TrainingCampaign(name, iterations, tuple(events), note=spec)

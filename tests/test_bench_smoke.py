@@ -56,3 +56,28 @@ def test_partition_bench_runs():
     bench_main(["--only", "partition"])
     assert os.path.exists(
         os.path.join(bench_common.OUT_DIR, "partition_appendix_a.json"))
+
+
+def test_training_bench_tiny_campaign():
+    """The multi-iteration campaign path (tiny shape: 3 iterations, one
+    mid-campaign NIC failure) must run end-to-end on every push: overhead
+    positive and sane, recovery cost ledger-derived (nonzero)."""
+    bench_main(["--only", "training", "--tiny"])
+    rows = _rows("training_fig7")
+    assert rows["campaign_iterations"] == 3.0
+    assert 0.0 < rows["campaign_overhead"] < 0.5
+    assert rows["campaign_recovery_cost"] > 0.0
+    assert rows["campaign_degraded_dp_comm"] > 0.0
+
+
+def test_runtime_bench_tiny_campaign_sweep():
+    """The bench_runtime campaign sweep rows (clean / flap storm / slow
+    NIC over 3 iterations) must be emitted with ledger totals."""
+    bench_main(["--only", "runtime", "--tiny"])
+    rows = _rows("runtime_recovery")
+    for name in ("campaign_clean_nic_down", "campaign_flap_storm",
+                 "campaign_slow_nic"):
+        assert f"{name}_overhead" in rows
+        assert rows[f"{name}_ledger_total"] > 0.0
+    # comm-only overhead: the repair window dominates at tiny payloads
+    assert rows["campaign_clean_nic_down_overhead"] > 0.0

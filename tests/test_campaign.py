@@ -1,0 +1,267 @@
+"""Multi-iteration training campaigns through the recovery runtime.
+
+Covers the PR-3 acceptance criteria:
+  * determinism under a fixed seed (same campaign twice -> identical
+    timelines and ledgers);
+  * the persistent control plane's ledger equals the per-iteration engine
+    delays, summed across the whole campaign;
+  * payload conservation across an iteration boundary where a program
+    replanned after iteration k is reused in k+1;
+  * ``training_overhead(mode="event", iterations>=8)`` with one
+    mid-campaign NIC failure derives recovery cost from the campaign
+    ``RecoveryLedger`` and stays inside the paper's <1% envelope, while
+    alpha-beta results are unchanged.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.comm_sim import H100_BF16_FLOPS, TrainJob, training_overhead
+from repro.core.event_sim import simulate_program
+from repro.core.failures import (
+    link_flap,
+    nic_down_at,
+    single_nic_failure,
+    slow_nic,
+)
+from repro.core.schedule import ring_program
+from repro.core.topology import IB_NIC_BW, make_cluster
+from repro.runtime import (
+    ControlPlane,
+    RecoveryState,
+    TrainingCampaign,
+    at_chunk,
+    at_iteration,
+    campaign_clean_nic_down,
+    campaign_flap_storm,
+    parse_training_campaign,
+    run_campaign,
+    training_campaign_report,
+)
+
+NIC_BW = 25e9
+PAYLOAD = 20e6
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    return make_cluster(4, 4, nic_bandwidth=NIC_BW)
+
+
+@pytest.fixture(scope="module")
+def t_h(cluster):
+    return simulate_program(ring_program(list(range(4)), 4), PAYLOAD,
+                            cluster=cluster).completion_time
+
+
+def _data(n, size=64, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=size) for _ in range(n)]
+
+
+def _mixed_campaign(t_h, iterations=6):
+    return TrainingCampaign(
+        "mixed", iterations,
+        (at_iteration(1, nic_down_at(1, 0, 0.4 * t_h)),
+         at_iteration(2, link_flap(2, 1, 0.2 * t_h, 0.05 * t_h)),
+         at_iteration(4, slow_nic(0, 1, 0.1 * t_h, lost_fraction=0.3))))
+
+
+# ---------------------------------------------------------------------------
+# campaign semantics
+# ---------------------------------------------------------------------------
+
+def test_campaign_determinism(cluster, t_h):
+    """Same campaign, same seed-free inputs -> bit-identical timelines."""
+    a = run_campaign(_mixed_campaign(t_h), cluster, PAYLOAD, healthy_time=t_h)
+    b = run_campaign(_mixed_campaign(t_h), cluster, PAYLOAD, healthy_time=t_h)
+    assert [it.completion_time for it in a.iterations] == \
+        [it.completion_time for it in b.iterations]
+    assert a.total_time == b.total_time
+    assert a.recovery_cost == b.recovery_cost
+    assert a.transitions == b.transitions
+    assert [(e.t_start, e.total) for e in a.ledger.entries] == \
+        [(e.t_start, e.total) for e in b.ledger.entries]
+
+
+def test_ledger_equals_engine_delays_across_iterations(cluster, t_h):
+    """Every derived repair delay the engines applied, campaign-wide, must
+    equal the corresponding hard-failure pipeline's ledger latency — the
+    recovery cost is derived once, in one persistent control plane."""
+    rep = run_campaign(_mixed_campaign(t_h), cluster, PAYLOAD, healthy_time=t_h)
+    derived = [ev for it in rep.iterations
+               for ev in it.report.repair_events if ev.derived]
+    hard = [e for e in rep.ledger.entries
+            if e.failure is not None and e.failure.severity >= 1.0]
+    assert len(derived) == len(hard) >= 2        # NIC down + flap
+    for ev, e in zip(derived, hard):
+        assert ev.delay == pytest.approx(e.hot_repair_latency)
+    assert rep.recovery_cost == pytest.approx(
+        sum(e.total for e in rep.ledger.entries))
+
+
+def test_state_carries_over_iterations(cluster, t_h):
+    """A hard failure in iteration k degrades every later iteration: the
+    capacity loss, the control plane's failure state, and the boundary
+    replan all persist instead of being rebuilt per collective."""
+    rep = run_campaign(campaign_clean_nic_down(t_h, iterations=6),
+                       cluster, PAYLOAD, healthy_time=t_h)
+    its = rep.iterations
+    # before the failure: healthy ring at the healthy time
+    assert its[0].completion_time == pytest.approx(t_h)
+    assert not its[0].state_after.failed_nics
+    # after: the NIC stays failed and every later sync runs degraded
+    for it in its[4:]:
+        assert it.state_after.failed_nics == {(1, 0)}
+        assert it.completion_time > t_h
+        assert it.program_source == "replanned"   # boundary re-selection
+    # the failing iteration itself paid the (ledger-derived) repair window
+    assert its[3].completion_time > its[4].completion_time
+    assert rep.final_state is RecoveryState.REPLANNED
+    # one pipeline run + one boundary replan, nothing rebuilt per iteration
+    assert len(rep.ledger.entries) == 2
+
+
+def test_flap_storm_across_iterations_replans(cluster, t_h):
+    """Flaps spread one-per-iteration only cross the replan threshold
+    because the flap window spans gradient syncs; the adapted program then
+    sticks while the NIC remains a known flapper."""
+    rep = run_campaign(campaign_flap_storm(t_h, iterations=6), cluster,
+                       PAYLOAD, healthy_time=t_h)
+    assert any("replan" in e.stages for e in rep.ledger.entries)
+    assert any(it.program_source == "replanned" for it in rep.iterations)
+    # every flap recovered -> campaign ends healthy
+    assert rep.final_state is RecoveryState.HEALTHY
+    assert not rep.iterations[-1].state_after.failed_nics
+
+
+def test_payload_conservation_across_replan_boundary(cluster, t_h):
+    """Iteration k's persistent failure replans at the boundary; iteration
+    k+1 reuses that program from a clean start — so real payloads stay
+    conserved on BOTH sides of the boundary."""
+    data = _data(4)
+    want = np.sum(np.stack(data), axis=0)
+    rep = run_campaign(
+        campaign_clean_nic_down(t_h, iterations=4, fail_iteration=1),
+        cluster, PAYLOAD, healthy_time=t_h, rank_data=data)
+    assert rep.iterations[2].program_source == "replanned"
+    for it in rep.iterations:
+        assert it.report.rank_data is not None
+        for r in it.report.rank_data:
+            np.testing.assert_allclose(r, want, rtol=1e-12)
+
+
+def test_campaign_global_ledger_times(cluster, t_h):
+    """Ledger entries and state transitions are stamped in campaign-global
+    virtual time, monotonically, even though each iteration's engine runs
+    its own t=0 clock."""
+    rep = run_campaign(_mixed_campaign(t_h), cluster, PAYLOAD, healthy_time=t_h)
+    times = [t for t, _ in rep.transitions]
+    assert times == sorted(times)
+    starts = [e.t_start for e in rep.ledger.entries]
+    assert starts == sorted(starts)
+    # the NIC-down pipeline ran during iteration 1, in global time
+    hard = next(e for e in rep.ledger.entries
+                if e.failure is not None and e.failure.severity >= 1.0)
+    assert rep.iterations[1].t_start < hard.t_start < rep.iterations[2].t_start
+
+
+def test_iteration_indexed_placement_validation(t_h):
+    with pytest.raises(ValueError):
+        TrainingCampaign("bad", 2, (at_iteration(5, nic_down_at(0, 0, 0.0)),))
+    with pytest.raises(ValueError):
+        at_chunk(t_h, chunk=4, num_chunks=4)
+    # chunk placement lands strictly inside the collective
+    assert 0.0 < at_chunk(t_h, 0, 4) < at_chunk(t_h, 3, 4) < t_h
+
+
+def test_parse_training_campaign_roundtrip(t_h):
+    tc = parse_training_campaign(
+        "mid", "nic_down node=1 rail=0 iter=3 at=0.4; "
+               "flap node=2 rail=1 iter=5 at=0.2 down=0.05",
+        iterations=8, t_scale=t_h)
+    assert tc.iterations == 8
+    assert [k for k, _ in tc.events] == [3, 5]
+    assert tc.failures_for(3)[0].at_time == pytest.approx(0.4 * t_h)
+    with pytest.raises(ValueError):
+        parse_training_campaign("bad", "nic_down node=0 rail=0 iter=9 at=0",
+                                iterations=4)
+    # iter= is rejected by the single-collective parser — any value,
+    # including the default-looking iter=0
+    from repro.runtime import parse_campaign
+    with pytest.raises(ValueError):
+        parse_campaign("bad", "nic_down node=0 rail=0 iter=1 at=0")
+    with pytest.raises(ValueError):
+        parse_campaign("bad", "nic_down node=0 rail=0 iter=0 at=0")
+
+
+def test_flap_recovery_keeps_physical_time_across_boundary_replan(cluster, t_h):
+    """A flap whose recovery lands in a later iteration must come back up
+    at its physical campaign-global time even when a boundary replan
+    advances the campaign clock in between (the carry rebasing accounts
+    for the boundary cost)."""
+    down_local = 10.0 * t_h                      # spans the iteration boundary
+    tc = TrainingCampaign(
+        "span", 8,
+        (at_iteration(1, nic_down_at(1, 0, 0.37 * t_h)),   # forces boundary replan
+         at_iteration(1, link_flap(2, 1, 0.43 * t_h, down_local))))
+    rep = run_campaign(tc, cluster, PAYLOAD, healthy_time=t_h)
+    # the boundary after iteration 1 charged a replan (nonzero clock advance)
+    assert rep.iterations[1].boundary_cost > 0.0
+    # the flap did not recover inside iteration 1
+    flap_global = rep.iterations[1].t_start + 0.43 * t_h + down_local
+    assert rep.iterations[1].t_start + rep.iterations[1].completion_time \
+        < flap_global
+    # the control plane observed the recovery at the physical global time
+    reprobes = [e for e in rep.control_plane.detector.log
+                if e.kind == "reprobe"]
+    assert reprobes
+    assert reprobes[-1].time == pytest.approx(flap_global, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: training_overhead(mode="event") over a campaign
+# ---------------------------------------------------------------------------
+
+def test_training_overhead_event_campaign_paper_envelope():
+    """>=8-iteration campaign, one mid-campaign NIC failure: overhead is
+    ledger-derived and inside the paper's <1% envelope; the alpha-beta
+    closed form is untouched."""
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    job = TrainJob(params=2.7e9, dp=16, tp=1, pp=1, global_batch=256,
+                   seq_len=2048, layers=32, hidden=2560,
+                   flops_per_chip=H100_BF16_FLOPS, nic_stripe=3)
+    fails = single_nic_failure(0, 0)
+
+    ov = training_overhead(job, cluster, fails, mode="event", iterations=8)
+    assert 0.0 < ov < 0.01
+
+    res = training_campaign_report(job, cluster, fails, iterations=8)
+    assert res.overhead == pytest.approx(ov)
+    # recovery cost comes from the persistent control plane's ledger
+    assert res.recovery_cost == pytest.approx(
+        res.campaign.ledger.total_latency())
+    assert res.recovery_cost > 0
+    derived = [ev for it in res.campaign.iterations
+               for ev in it.report.repair_events]
+    assert derived and all(ev.derived for ev in derived)
+    # iterations after the failure run degraded but recovered syncs
+    assert max(res.dp_comm_times) > min(res.dp_comm_times)
+
+    # alpha-beta mode unchanged: same value as the direct steady-state ratio
+    from repro.core.comm_sim import FailureState, iteration_time
+    healthy = iteration_time(job, cluster, FailureState(), strategy="ring")
+    st = FailureState()
+    for f in fails:
+        st.apply(f)
+    failed = iteration_time(job, cluster, st, strategy="r2ccl")
+    assert training_overhead(job, cluster, fails, strategy="r2ccl") == \
+        pytest.approx(failed.total / healthy.total - 1.0)
+
+
+def test_multi_iteration_requires_event_mode():
+    cluster = make_cluster(2, 4)
+    job = TrainJob(params=1e9, dp=8)
+    with pytest.raises(ValueError):
+        training_overhead(job, cluster, single_nic_failure(0, 0),
+                          mode="alpha_beta", iterations=4)

@@ -71,6 +71,41 @@ def test_inference_overhead_headline():
     assert 0 <= out["overhead"] < 0.03
 
 
+def test_r2ccl_hot_repair_charged_per_failure():
+    """Regression: the r2ccl request path used to charge the hot-repair
+    latency exactly once no matter how many failures were injected — each
+    dead NIC runs its own rollback + backup-NIC activation."""
+    from repro.core.comm_sim import R2CCL_MIGRATION_LATENCY
+    from repro.core.failures import FailureState, concentrated_failures
+
+    cluster = make_cluster(2, 8, nic_bandwidth=IB_NIC_BW)
+    job = ServeJob(params=405e9, tp=8, pp=2)
+    fails = concentrated_failures(0, [0, 1])
+    out = request_latency_under_failure(job, cluster, fails,
+                                        strategy="r2ccl",
+                                        fail_at_decode_step=100)
+    st = FailureState()
+    for f in fails:
+        st.apply(f)
+    t_prefill = job.prefill_time(cluster, FailureState())
+    d_healthy = job.decode_step_time(cluster, FailureState())
+    d_degraded = job.decode_step_time(cluster, st)
+    expected = t_prefill + 100 * d_healthy \
+        + 2 * R2CCL_MIGRATION_LATENCY + (job.gen_tokens - 100) * d_degraded
+    assert out["total"] == pytest.approx(expected)
+    # one failure still pays exactly one hot repair
+    one = request_latency_under_failure(job, cluster, single_nic_failure(0, 0),
+                                        strategy="r2ccl",
+                                        fail_at_decode_step=100)
+    st1 = FailureState()
+    for f in single_nic_failure(0, 0):
+        st1.apply(f)
+    d1 = job.decode_step_time(cluster, st1)
+    assert one["total"] == pytest.approx(
+        t_prefill + 100 * d_healthy + R2CCL_MIGRATION_LATENCY
+        + (job.gen_tokens - 100) * d1)
+
+
 def test_iteration_breakdown_consistency():
     cluster = make_cluster(4, 8)
     job = TrainJob(params=7e9, dp=32, tp=1, pp=1)

@@ -76,6 +76,34 @@ def test_reprobe_recovery():
     assert nxt > 5.0
 
 
+def test_adaptive_reprobe_period():
+    from repro.core.detection import (
+        REPROBE_PERIOD,
+        REPROBE_PERIOD_MAX,
+        REPROBE_PERIOD_MIN,
+        adaptive_reprobe_period,
+    )
+
+    # stable link: faster than the base constant (recovery detection
+    # latency shrinks), but never below the floor
+    assert adaptive_reprobe_period(0) < REPROBE_PERIOD
+    assert adaptive_reprobe_period(0) >= REPROBE_PERIOD_MIN
+    # each recent flap backs the cadence off, monotonically
+    periods = [adaptive_reprobe_period(k) for k in range(6)]
+    assert periods == sorted(periods)
+    # ceiling holds for any storm size
+    assert adaptive_reprobe_period(50) == REPROBE_PERIOD_MAX
+    with pytest.raises(ValueError):
+        adaptive_reprobe_period(-1)
+
+
+def test_reprobe_cadence_feeds_flap_count():
+    det = FailureDetector(FailureState())
+    _, stable = det.reprobe((0, 0), now=0.0, recovered=False, flap_count=0)
+    _, flappy = det.reprobe((0, 0), now=0.0, recovered=False, flap_count=4)
+    assert stable < flappy
+
+
 def test_failure_scope_table2():
     st = FailureState()
     assert st.apply(Failure(FailureType.NIC_HARDWARE, 0, 0))

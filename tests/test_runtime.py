@@ -192,6 +192,58 @@ def test_node_loss_forces_replan():
     assert second.decision.replan is not None
 
 
+def test_flap_threshold_uses_sliding_window():
+    """Regression: flap counts used to grow monotonically forever, so one
+    historical storm pushed every later failure on that NIC over the replan
+    threshold.  The threshold must reflect *recent* flapping only."""
+    from repro.core.failures import link_flap
+
+    cluster = make_cluster(4, 4, nic_bandwidth=NIC_BW)
+    # storm inside the window -> the 3rd flap replans
+    cp = ControlPlane(cluster, payload_bytes=PAYLOAD, flap_window=10.0)
+    outs = [cp.handle_failure(link_flap(1, 0, t, 0.01), now=t)
+            for t in (0.0, 1.0, 2.0)]
+    assert "replan" in outs[-1].entry.stages
+    # same three flaps spread far beyond the window -> never replans
+    cp2 = ControlPlane(cluster, payload_bytes=PAYLOAD, flap_window=10.0)
+    outs2 = [cp2.handle_failure(link_flap(1, 0, t, 0.01), now=t)
+             for t in (0.0, 100.0, 200.0)]
+    assert all("replan" not in o.entry.stages for o in outs2)
+    # all-time totals stay observable even after the window drained
+    assert cp2.flap_counts[(1, 0)] == 3
+    assert cp2.recent_flaps((1, 0), now=200.0) == 1
+
+
+def test_reprobe_cadence_adapts_to_flap_history():
+    """The control plane schedules the next re-probe from the NIC's recent
+    flap history: stable links probe faster than the base constant, recent
+    flappers back off — within the floor/ceiling."""
+    from repro.core.detection import (
+        REPROBE_PERIOD,
+        REPROBE_PERIOD_MAX,
+        REPROBE_PERIOD_MIN,
+    )
+    from repro.core.failures import link_flap, nic_down_at
+
+    cluster = make_cluster(4, 4, nic_bandwidth=NIC_BW)
+    cp = ControlPlane(cluster, payload_bytes=PAYLOAD)
+    # a one-off hard failure that recovers: stable link, fast cadence
+    f = nic_down_at(1, 0, 0.0)
+    cp.handle_failure(f, now=0.0)
+    cp.handle_recovery(f, now=0.5)
+    stable_period = cp.next_reprobe[(1, 0)] - 0.5
+    assert REPROBE_PERIOD_MIN <= stable_period < REPROBE_PERIOD
+    # hammer a different NIC with flaps: cadence backs off
+    for i in range(5):
+        fl = link_flap(2, 1, float(i), 0.01)
+        cp.handle_failure(fl, now=float(i))
+        cp.handle_recovery(fl, now=float(i) + 0.01)
+    flappy_period = cp.next_reprobe[(2, 1)] - 4.01
+    assert flappy_period > stable_period
+    assert flappy_period <= REPROBE_PERIOD_MAX
+    assert cp.reprobe_period((2, 1), now=4.01) == pytest.approx(flappy_period)
+
+
 def test_recovery_transition_back_to_healthy(cluster, t_h):
     """A single flap that recovers re-probes healthy: HEALTHY terminal."""
     sc = parse_campaign("one_flap", "flap node=1 rail=0 at=0.3 down=0.2",
