@@ -13,6 +13,8 @@ is checked against the alpha-beta ``R2CCL_MIGRATION_LATENCY`` constant
 
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.comm_sim import NIC_200G, R2CCL_MIGRATION_LATENCY
 from repro.core.event_sim import simulate_program
 from repro.core.failures import random_failures
@@ -20,6 +22,7 @@ from repro.core.schedule import ring_program
 from repro.core.topology import make_cluster
 from repro.runtime import (
     Scenario,
+    flap_storm,
     run_campaign,
     run_scenario,
     standard_campaigns,
@@ -70,6 +73,35 @@ def run(tiny: bool = False, seed: int = 0) -> None:
     r.row("clean_failover_vs_alpha_beta_constant", ratio,
           f"{clean.failover_latency * 1e3:.3f}ms vs "
           f"{R2CCL_MIGRATION_LATENCY * 1e3:.1f}ms; must be within 2x")
+
+    # --- mid-collective replan: payload-conserving program swap -------------
+    # A flap storm crosses the replan threshold while real payloads are in
+    # flight; the chunk-map residual replan (PR 4) retains completed chunks
+    # and resumes the rest, so the AllReduce stays exact through the swap.
+    # The payload is scaled up so the collective outlives the ~1.7 ms replan
+    # broadcast latency even at --tiny scale.
+    replan_payload = 4e8
+    t_r = simulate_program(
+        ring_program(list(range(servers)), servers), replan_payload,
+        cluster=cluster).completion_time
+    rng = np.random.default_rng(seed)
+    rank_data = [rng.normal(size=256) for _ in range(servers)]
+    want = np.sum(np.stack(rank_data), axis=0)
+    rrep = run_scenario(
+        flap_storm(t_r, node=min(1, servers - 1), count=4), cluster,
+        replan_payload, healthy_time=t_r, rank_data=rank_data)
+    err = max(float(np.max(np.abs(np.asarray(d) - want)))
+              for d in rrep.report.rank_data)
+    evs = rrep.report.replan_events
+    r.row("mid_replan_count", float(rrep.report.replans),
+          f"program swaps while payload in flight ({replan_payload:.3g}B)")
+    r.row("mid_replan_retrans_bytes", rrep.report.retransmitted_bytes,
+          f"cancelled/rolled-back stream waste over {len(evs)} swap(s)")
+    r.row("mid_replan_residual_fraction",
+          evs[0].residual_fraction if evs else 0.0,
+          "payload genuinely missing at the first swap (chunk map)")
+    r.row("mid_replan_payload_max_error", err,
+          "max |allreduce - oracle| through the swap; ~0 = lossless")
 
     # --- multi-iteration campaign sweep (paper Figs. 7-10 unit) -------------
     # N gradient syncs back-to-back through ONE persistent control plane:

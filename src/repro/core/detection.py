@@ -243,7 +243,8 @@ class FailureDetector:
 
     # -- recovery re-probing -------------------------------------------------
     def reprobe(self, nic: tuple[int, int], now: float,
-                recovered: bool, flap_count: int = 0) -> tuple[bool, float]:
+                recovered: bool, flap_count: int = 0,
+                period: float | None = None) -> tuple[bool, float]:
         """Periodic health re-probe of a previously failed component.
 
         Returns (healthy_again, next_probe_time).  ``flap_count`` is the
@@ -251,9 +252,13 @@ class FailureDetector:
         sliding window); the cadence adapts to it — stable links are probed
         faster than the base period, flappy links back off exponentially
         between the floor and ceiling (the paper's 'adapting probe frequency
-        based on observed failure and recovery patterns').
+        based on observed failure and recovery patterns').  ``period``
+        overrides the adaptive default when the caller runs its own cadence
+        (e.g. a control plane with a rescaled probe base).
         """
         self._emit(now, "reprobe", f"{nic} -> {'ok' if recovered else 'still_down'}")
         if recovered:
             self.state.recover(nic)
-        return recovered, now + adaptive_reprobe_period(flap_count)
+        if period is None:
+            period = adaptive_reprobe_period(flap_count)
+        return recovered, now + period

@@ -34,15 +34,30 @@ Model
 * When ``rank_data`` is given the engine also moves real numpy payloads
   (snapshot at transfer start, write/accumulate at completion), so
   conservation under failure is *checked*, not presumed.
+* The engine tracks a **per-rank, per-chunk completion map**: a chunk is
+  durably complete at a rank once every write the schedule directs at it
+  has landed — by the per-rank lockstep dependency order that is exactly
+  when the chunk holds its end-of-schedule value.  The map is what makes
+  a mid-collective program swap payload-conserving (see below) and is
+  exported to the control plane as :class:`ChunkProgress` so the planner
+  prices the *residual* collective, not the whole payload.
 * An optional ``controller`` (the online recovery control plane in
   :mod:`repro.runtime`) is consulted at every failure/recovery event in
   virtual time.  Its :class:`RecoveryDecision` *derives* the restart delay
   from the detect→diagnose→migrate→rebalance pipeline instead of the
   closed-form ``repair_latency`` constant, rescales residual capacity by
   the rebalance detour efficiency, and may swap in a freshly planned
-  :class:`CollectiveProgram` mid-collective at chunk granularity
-  (completed chunk work is retained; the new schedule covers the
-  remaining bytes).
+  :class:`CollectiveProgram` mid-collective at chunk granularity.  The
+  swap resumes from the exact chunk map: *settled* chunks (final at every
+  rank that needs them) are retained verbatim, chunks final at *some*
+  ranks are broadcast from a holder to the ranks still missing them, and
+  only chunks final **nowhere** are rolled back to their pristine
+  contributions and re-reduced under the new program — so real payloads
+  survive the swap and conservation stays checkable end-to-end.
+* A recovery event (flap back up) is *physical*; when a controller is
+  attached, the capacity is only restored once the controller confirms it
+  — at its next scheduled re-probe tick — so the probe cadence shapes
+  recovery latency in the simulated timeline.
 
 The engine reports per-collective completion time, per-link bytes,
 per-rank egress utilization, and retransmitted bytes after failover.
@@ -58,7 +73,12 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from .failures import Failure, OUT_OF_SCOPE
-from .schedule import ChunkSchedule, CollectiveProgram
+from .schedule import (
+    ChunkSchedule,
+    CollectiveProgram,
+    Segment,
+    build_ring_broadcast,
+)
 from .topology import ClusterTopology, DEFAULT_ALPHA
 
 #: restart delay after a rollback (matches the paper's low-millisecond
@@ -96,6 +116,41 @@ class _Transfer:
 
 
 @dataclasses.dataclass
+class _SegState:
+    """Chunk-completion bookkeeping for one instantiated segment.
+
+    ``writers_left[r, c]`` counts the writes the segment's schedule still
+    owes chunk ``c`` at rank ``r``; zero means the chunk holds its
+    end-of-schedule value there (per-rank lockstep orders the writes, so
+    the last one landing *is* the final value).  ``needed`` is the rank set
+    that must end with the final value — the schedule's ``result_ranks``,
+    falling back to its participants.
+    """
+
+    schedule: ChunkSchedule
+    seg_bytes: float                      # timing bytes of this segment
+    needed: tuple[int, ...]
+    writers_left: np.ndarray              # (n, num_chunks) int
+    retired: bool = False                 # superseded by a replan
+
+
+@dataclasses.dataclass
+class _SegData:
+    """Real-payload buffers of one segment, remappable across replans.
+
+    ``dest`` maps the first ``len(dest)`` elements of the flattened chunk
+    buffer back to positions in the original flat input (trailing elements
+    are chunk padding).  ``write_ranks`` limits which ranks' buffers are
+    meaningful at write-back time (a residual delivery broadcast only
+    covers the holder and the missing ranks); None = all ranks.
+    """
+
+    bufs: list[np.ndarray]                # [rank] -> (num_chunks, chunk_len)
+    dest: np.ndarray                      # original flat positions
+    write_ranks: tuple[int, ...] | None = None
+
+
+@dataclasses.dataclass
 class RecoveryDecision:
     """What the online control plane tells the engine to do about one failure.
 
@@ -116,6 +171,59 @@ class RecoveryDecision:
     #: virtual time from the failure until the new program is live (the full
     #: pipeline latency including the replan stage)
     replan_delay: float = 0.0
+    #: payload the planner priced when choosing ``replan`` — the engine's
+    #: residual (not-yet-settled) bytes at the failure instant, when the
+    #: chunk map was threaded through; None = planned for the full payload
+    replan_payload: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkProgress:
+    """The engine's chunk-map summary at one instant, planner-facing.
+
+    ``rereduce_bytes`` is payload final at *no* rank (must be re-reduced
+    from pristine contributions), ``deliver_bytes`` is payload final at
+    some rank but still missing elsewhere (a broadcast completes it).
+    Everything else is settled — durably complete at every rank that
+    needs it — and survives a program swap untouched.
+    """
+
+    total_bytes: float
+    rereduce_bytes: float
+    deliver_bytes: float
+
+    @property
+    def residual_bytes(self) -> float:
+        return self.rereduce_bytes + self.deliver_bytes
+
+    @property
+    def settled_bytes(self) -> float:
+        return max(0.0, self.total_bytes - self.residual_bytes)
+
+    @property
+    def residual_fraction(self) -> float:
+        return (self.residual_bytes / self.total_bytes
+                if self.total_bytes > 0 else 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplanEvent:
+    """One mid-collective program swap, as the engine executed it."""
+
+    at_time: float
+    #: payload the residual program was instantiated over (timing bytes)
+    residual_bytes: float
+    #: residual as a fraction of the collective's original payload
+    residual_fraction: float
+    #: residual final at no rank — rolled back to pristine and re-reduced
+    rereduce_bytes: float
+    #: residual final at a holder rank — broadcast to the missing ranks
+    deliver_bytes: float
+    #: the superseded (active) program's completed transfer bytes at the
+    #: swap — its durable progress; earlier retired programs not included
+    done_bytes: float
+    #: unfinished transfers of the superseded program cancelled at the swap
+    cancelled: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,7 +241,10 @@ class EventSimReport:
     """What one simulated collective did."""
 
     completion_time: float
-    #: absolute finish time of each segment's last transfer
+    #: absolute finish time of each segment's last transfer, cumulative
+    #: across program swaps: the initial program's segments first, then each
+    #: replanned residual program's, in instantiation order.  Timestamps of
+    #: segments that finished before a replan are preserved, not reset.
     segment_finish: list[float]
     #: bytes moved per directed (src, dst) rank pair, retransmissions included
     link_bytes: dict[tuple[int, int], float]
@@ -153,6 +264,8 @@ class EventSimReport:
     cancelled_transfers: int = 0
     #: per-hard-failure hot-repair record, in virtual-time order
     repair_events: list[RepairEvent] = dataclasses.field(default_factory=list)
+    #: per-swap chunk-exact residual accounting, in virtual-time order
+    replan_events: list[ReplanEvent] = dataclasses.field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +301,11 @@ class _Capacities:
 
     def fail(self, rank: int, failure: Failure) -> None:
         self._lost[rank][failure] = (failure.rail, failure.severity)
+
+    def rail_dead(self, rank: int, rail: int) -> bool:
+        """True while any active hard failure still holds ``rail`` down."""
+        return any(r == rail and sev >= 1.0
+                   for r, sev in self._lost[rank].values())
 
     def recover(self, rank: int, failure: Failure) -> None:
         self._lost[rank].pop(failure, None)
@@ -301,6 +419,11 @@ class EventSimulator:
         self.healthy_caps = [self.caps.capacity(r) for r in range(prog.n)]
 
         self.transfers: list[_Transfer] = []
+        self._segstate: list[_SegState] = []
+        self.segment_finish: list[float] = []
+        #: absolute index of the active program's first segment in the
+        #: cumulative per-segment lists (advances at every replan)
+        self._active_seg_base = 0
         self._instantiate(prog, self.total_bytes)
         self._remaining = len(self.transfers)
         self._max_iters = 50 * len(self.transfers) + 10_000
@@ -347,8 +470,8 @@ class EventSimulator:
         self.replans = 0
         self.cancelled_transfers = 0
         self.repair_events: list[RepairEvent] = []
+        self.replan_events: list[ReplanEvent] = []
         self.events_processed = 0
-        self.segment_finish = [0.0] * len(prog.segments)
 
     # -- construction --------------------------------------------------------
     def _check_target(self, f: Failure) -> None:
@@ -368,28 +491,46 @@ class EventSimulator:
     def _instantiate(self, prog: CollectiveProgram, total_bytes: float) -> list[_Transfer]:
         """Build + dependency-wire ``prog``'s transfers over ``total_bytes``.
 
-        Appends to ``self.transfers`` (tids continue after existing ones) and
-        returns the new transfers.  Dependency rule: transfer (seg, step i,
-        {s,d}) waits on all transfers of s's and d's previous participating
-        step in the same segment.  Used both at init and when the control
-        plane swaps in a replanned program mid-collective.
+        Appends to ``self.transfers`` (tids continue after existing ones),
+        registers one :class:`_SegState` per segment (segment indices are
+        *absolute* across program swaps — ``segment_finish`` and the chunk
+        map grow, never reset), and returns the new transfers.  Dependency
+        rule: transfer (seg, step i, {s,d}) waits on all transfers of s's
+        and d's previous participating step in the same segment.  Used at
+        init and when the control plane swaps in a replanned program
+        mid-collective.
         """
         base = len(self.transfers)
+        seg_base = len(self._segstate)
         for si, seg in enumerate(prog.segments):
             sched = seg.schedule
             seg_bytes = total_bytes * seg.frac
             chunk_bytes = seg_bytes / sched.num_chunks
+            writers = np.zeros((prog.n, sched.num_chunks), dtype=np.int64)
+            participants: set[int] = set()
             for step_i, st in enumerate(sched.steps):
                 size = seg_bytes if st.whole_buffer else chunk_bytes
                 for src, dst in st.perm:
+                    participants.update((src, dst))
+                    if st.whole_buffer:
+                        writers[dst, :] += 1
+                    else:
+                        writers[dst, st.recv_chunk[dst]] += 1
                     self.transfers.append(_Transfer(
-                        tid=len(self.transfers), seg=si, step=step_i,
+                        tid=len(self.transfers), seg=seg_base + si,
+                        step=step_i,
                         src=src, dst=dst, size=size,
                         accumulate=st.accumulate,
                         whole_buffer=st.whole_buffer,
                         send_chunk=st.send_chunk[src],
                         recv_chunk=st.recv_chunk[dst],
                     ))
+            needed = (tuple(sched.result_ranks) if sched.result_ranks
+                      else tuple(sorted(participants)))
+            self._segstate.append(_SegState(
+                schedule=sched, seg_bytes=seg_bytes, needed=needed,
+                writers_left=writers))
+            self.segment_finish.append(0.0)
         new = self.transfers[base:]
         by_seg_step_rank: dict[tuple[int, int, int], list[_Transfer]] = {}
         for t in new:
@@ -398,7 +539,7 @@ class EventSimulator:
         for si, seg in enumerate(prog.segments):
             rank_steps = seg.schedule.rank_steps()
             for t in new:
-                if t.seg != si:
+                if t.seg != seg_base + si:
                     continue
                 prereqs: set[int] = set()
                 for r in {t.src, t.dst}:
@@ -406,7 +547,8 @@ class EventSimulator:
                     pos = steps.index(t.step)
                     if pos > 0:
                         prev = steps[pos - 1]
-                        for p in by_seg_step_rank.get((si, prev, r), []):
+                        for p in by_seg_step_rank.get(
+                                (seg_base + si, prev, r), []):
                             prereqs.add(p.tid)
                 prereqs.discard(t.tid)
                 t.deps = len(prereqs)
@@ -416,7 +558,7 @@ class EventSimulator:
 
     def _init_data(self, rank_data: Sequence[np.ndarray] | None) -> None:
         """Per-rank, per-segment chunked float64 buffers (as executor_np)."""
-        self._data = None
+        self._data: list[_SegData] | None = None
         if rank_data is None:
             return
         n = self.prog.n
@@ -424,6 +566,9 @@ class EventSimulator:
         data = [np.asarray(d, dtype=np.float64) for d in rank_data]
         total = data[0].shape[-1]
         self._orig_total = total
+        #: pristine per-rank contributions — what a chunk rolls back to when
+        #: a replan finds it durably complete at no rank
+        self._pristine = [d.copy() for d in data]
         # segment boundaries mirror executor_np.execute_program
         bounds = []
         start = 0
@@ -432,33 +577,61 @@ class EventSimulator:
                 start + int(round(seg.frac * total))
             bounds.append((start, end))
             start = end
-        self._seg_bounds = bounds
-        self._data = []           # [seg][rank] -> (chunked buffer, orig_len)
+        self._data = []
         for si, seg in enumerate(self.prog.segments):
             s, e = bounds[si]
-            nc = seg.schedule.num_chunks
-            bufs = []
-            orig = e - s
-            for r in range(n):
-                b = data[r][s:e]
-                pad = (-orig) % nc
-                if pad:
-                    b = np.concatenate([b, np.zeros(pad, np.float64)])
-                bufs.append(b.reshape(nc, -1).copy())
-            self._data.append((bufs, orig))
+            self._append_seg_data(
+                [data[r][s:e] for r in range(n)],
+                np.arange(s, e), None, seg.schedule.num_chunks)
+
+    def _append_seg_data(
+        self,
+        flat: Sequence[np.ndarray],
+        dest: np.ndarray,
+        write_ranks: tuple[int, ...] | None,
+        num_chunks: int,
+    ) -> None:
+        """Register one segment's payload buffers (chunk-padded, as
+        executor_np pads).  Must be called once per segment, in the same
+        order ``_instantiate`` registers segments, so absolute segment
+        indices address both ``_segstate`` and ``_data``."""
+        assert self._data is not None
+        orig = len(dest)
+        pad = (-orig) % num_chunks
+        bufs = []
+        for b in flat:
+            b = np.asarray(b, dtype=np.float64)
+            if pad:
+                b = np.concatenate([b, np.zeros(pad, np.float64)])
+            bufs.append(b.reshape(num_chunks, -1).copy())
+        self._data.append(_SegData(bufs=bufs, dest=dest,
+                                   write_ranks=write_ranks))
+
+    def _chunk_dest(self, si: int, c: int) -> np.ndarray:
+        """Original flat positions of chunk ``c`` of segment ``si`` (the
+        valid, non-padding elements only)."""
+        sd = self._data[si]
+        clen = sd.bufs[0].shape[1]
+        return sd.dest[c * clen:min((c + 1) * clen, len(sd.dest))]
+
+    def _chunk_values(self, si: int, c: int, rank: int) -> np.ndarray:
+        sd = self._data[si]
+        clen = sd.bufs[0].shape[1]
+        lo = c * clen
+        hi = min((c + 1) * clen, len(sd.dest))
+        return sd.bufs[rank].reshape(-1)[lo:hi]
 
     # -- data plane ----------------------------------------------------------
     def _snapshot(self, t: _Transfer) -> None:
         if self._data is None:
             return
-        bufs, _ = self._data[t.seg]
-        src_buf = bufs[t.src]
+        src_buf = self._data[t.seg].bufs[t.src]
         t.payload = src_buf.copy() if t.whole_buffer else src_buf[t.send_chunk].copy()
 
     def _deliver(self, t: _Transfer) -> None:
         if self._data is None or t.payload is None:
             return
-        bufs, _ = self._data[t.seg]
+        bufs = self._data[t.seg].bufs
         if t.whole_buffer:
             bufs[t.dst] = bufs[t.dst] + t.payload if t.accumulate \
                 else t.payload.copy()
@@ -475,11 +648,14 @@ class EventSimulator:
             return None
         n = self.prog.n
         out = [np.empty(self._orig_total, np.float64) for _ in range(n)]
-        for si in range(len(self.prog.segments)):
-            s, e = self._seg_bounds[si]
-            bufs, orig = self._data[si]
-            for r in range(n):
-                out[r][s:e] = bufs[r].reshape(-1)[:orig]
+        # Creation order: the initial program's segments cover every position
+        # at every rank; each residual program's segments then overwrite
+        # exactly the positions (and ranks) they re-covered.  Settled chunks
+        # keep their retired segment's values — that is the conservation.
+        for sd in self._data:
+            ranks = range(n) if sd.write_ranks is None else sd.write_ranks
+            for r in ranks:
+                out[r][sd.dest] = sd.bufs[r].reshape(-1)[:len(sd.dest)]
         return out
 
     # -- scheduling ----------------------------------------------------------
@@ -503,6 +679,12 @@ class EventSimulator:
         self.rank_tx[t.src] += t.size
         self.rank_rx[t.dst] += t.size
         self.segment_finish[t.seg] = max(self.segment_finish[t.seg], now)
+        # chunk map: one write owed to the destination chunk(s) has landed
+        writers = self._segstate[t.seg].writers_left
+        if t.whole_buffer:
+            writers[t.dst, :] -= 1
+        else:
+            writers[t.dst, t.recv_chunk] -= 1
         for d in t.dependents:
             dep = self.transfers[d]
             dep.deps -= 1
@@ -529,9 +711,19 @@ class EventSimulator:
     def _apply_failure(self, now: float, f: Failure, recovering: bool) -> None:
         rank = f.node
         if recovering:
-            self.caps.recover(rank, f)
+            # Physical recovery.  A co-simulated control plane only *observes*
+            # it at its next scheduled re-probe tick (on_recover returns that
+            # confirmation time); capacity is restored — and the failure state
+            # cleared — at the tick, so the probe cadence shapes recovery
+            # latency in the simulated timeline.  No controller (or an
+            # immediate/legacy-None return) keeps the instant restore.
+            confirm_at = None
             if self.controller is not None:
-                self.controller.on_recover(self, now, f)
+                confirm_at = self.controller.on_recover(self, now, f)
+            if confirm_at is not None and confirm_at > now + 1e-15:
+                self._push(confirm_at, "confirm", f)
+            else:
+                self._confirm_recovery(now, f)
             return
         self.caps.fail(rank, f)
         # Consult the co-simulated control plane *at the failure instant*:
@@ -565,29 +757,97 @@ class EventSimulator:
         if decision is not None and decision.replan is not None:
             self._push(now + decision.replan_delay, "replan", decision.replan)
 
-    def _do_replan(self, now: float, prog: CollectiveProgram) -> None:
-        """Swap in a freshly planned program at chunk granularity.
+    def _confirm_recovery(self, now: float, f: Failure) -> None:
+        """The re-probe confirming ``f``'s recovery: restore the capacity
+        (and any control-plane capacity factors tied to the failure) and let
+        the controller clear its failure state.  The probe observes the
+        rail's *current* state: if a different failure struck the same rail
+        while this confirmation was pending (flap down again before the
+        tick), the probe finds it down and must NOT clear the controller's
+        failure state — that later failure's own recovery will."""
+        self.caps.recover(f.node, f)
+        if self.caps.rail_dead(f.node, f.rail):
+            return
+        confirmed = getattr(self.controller, "on_recovery_confirmed", None)
+        if confirmed is not None:
+            confirmed(self, now, f)
 
-        Completed chunk work is retained: the fraction of communication work
-        already done under the old program stays done, every unfinished
-        transfer is cancelled (streamed-but-unacked bytes count as
-        retransmitted), and the new schedule is instantiated over the
-        remaining payload bytes.
+    # -- chunk map / residual ------------------------------------------------
+    def _classify_residual(self):
+        """Classify the active program's chunks by durable completion.
+
+        Returns ``(rereduce, deliver, rereduce_bytes, deliver_bytes)`` where
+        ``rereduce`` is ``[(abs_seg, [chunk, ...]), ...]`` — chunks final at
+        *no* needed rank (their partial sums are unusable under a different
+        algorithm: they roll back to pristine contributions and re-reduce) —
+        and ``deliver`` is ``[(abs_seg, holder, missing, [chunk, ...]), ...]``
+        — chunks some rank already holds the final value of, grouped by
+        (holder, missing-set): a broadcast from the holder completes them.
+        Chunks durably complete at every needed rank are settled and appear
+        in neither list.  Deterministic ordering throughout.
         """
-        if self._data is not None:
-            raise EventSimError(
-                "mid-collective replan with rank_data is unsupported: partial "
-                "progress of two different algorithms cannot be merged")
+        rereduce: list[tuple[int, list[int]]] = []
+        deliver: list[tuple[int, int, tuple[int, ...], list[int]]] = []
+        rereduce_bytes = 0.0
+        deliver_bytes = 0.0
+        for si in range(self._active_seg_base, len(self._segstate)):
+            ss = self._segstate[si]
+            if ss.retired or not ss.needed:
+                continue
+            nc = ss.schedule.num_chunks
+            chunk_bytes = ss.seg_bytes / nc
+            rr: list[int] = []
+            groups: dict[tuple[int, tuple[int, ...]], list[int]] = {}
+            for c in range(nc):
+                missing = tuple(r for r in ss.needed
+                                if ss.writers_left[r, c] > 0)
+                if not missing:
+                    continue                      # settled everywhere needed
+                done = [r for r in ss.needed if ss.writers_left[r, c] <= 0]
+                if done:
+                    groups.setdefault((done[0], missing), []).append(c)
+                    deliver_bytes += chunk_bytes
+                else:
+                    rr.append(c)
+                    rereduce_bytes += chunk_bytes
+            if rr:
+                rereduce.append((si, rr))
+            for (holder, missing), chunks in sorted(groups.items()):
+                deliver.append((si, holder, missing, chunks))
+        return rereduce, deliver, rereduce_bytes, deliver_bytes
+
+    def chunk_progress(self) -> ChunkProgress:
+        """The chunk map summarized for the control plane: how much payload
+        is still genuinely missing (vs durably settled) right now."""
+        _, _, rereduce_bytes, deliver_bytes = self._classify_residual()
+        return ChunkProgress(total_bytes=self.total_bytes,
+                             rereduce_bytes=rereduce_bytes,
+                             deliver_bytes=deliver_bytes)
+
+    def _do_replan(self, now: float, prog: CollectiveProgram) -> None:
+        """Swap in a freshly planned program, resuming from the chunk map.
+
+        Payload-conserving at chunk granularity: every unfinished transfer
+        of the superseded program is cancelled (streamed-but-unacked bytes
+        count as retransmitted), then the chunk map decides what remains —
+        settled chunks are retained verbatim, chunks final at some rank are
+        broadcast from a holder to the ranks missing them (the surviving
+        payloads ride along), and only chunks final nowhere roll back to
+        pristine contributions and re-reduce under ``prog``.  The residual
+        program is instantiated over exactly the missing chunk bytes, so
+        partial progress is never simultaneously charged as retransmitted
+        *and* re-included in the remaining payload (the old scalar
+        ``frac_done`` approximation did both).
+        """
         prog.validate()
         if prog.n != self.active_prog.n:
             raise EventSimError(
                 f"replanned program has {prog.n} ranks, expected "
                 f"{self.active_prog.n}")
-        live = [t for t in self.transfers if t.state != _CANCELLED]
-        total_work = sum(t.size for t in live)
-        done_work = sum(t.size for t in live if t.state == _DONE)
-        frac_done = done_work / total_work if total_work > 0 else 1.0
-        remaining_payload = self.total_bytes * max(0.0, 1.0 - frac_done)
+        n = self.prog.n
+        done_bytes = sum(t.size for t in self.transfers
+                         if t.state == _DONE
+                         and t.seg >= self._active_seg_base)
         cancelled = 0
         for t in self.transfers:
             if t.state in (_BLOCKED, _LATENT, _ACTIVE):
@@ -603,12 +863,81 @@ class EventSimulator:
                 cancelled += 1
         self.cancelled_transfers += cancelled
         self._remaining -= cancelled
-        self.active_prog = prog
-        self.segment_finish = [0.0] * len(prog.segments)
-        new = self._instantiate(prog, remaining_payload)
+
+        rereduce, deliver, rereduce_bytes, deliver_bytes = \
+            self._classify_residual()
+        residual_bytes = rereduce_bytes + deliver_bytes
+        self.replans += 1
+        self.replan_events.append(ReplanEvent(
+            at_time=now, residual_bytes=residual_bytes,
+            residual_fraction=(residual_bytes / self.total_bytes
+                               if self.total_bytes > 0 else 0.0),
+            rereduce_bytes=rereduce_bytes, deliver_bytes=deliver_bytes,
+            done_bytes=done_bytes, cancelled=cancelled))
+        for si in range(self._active_seg_base, len(self._segstate)):
+            self._segstate[si].retired = True
+        if residual_bytes <= 0.0:
+            # The swap arrived after the last chunk settled: nothing to
+            # resume — the cancelled redundant sends were all that was left.
+            return
+
+        # Residual program: the planner's program over the re-reduce bytes
+        # (its own segment fractions preserved), plus one delivery-broadcast
+        # segment per (holder, missing-set) group.
+        segments: list[Segment] = []
+        if rereduce_bytes > 0.0:
+            for seg in prog.segments:
+                segments.append(Segment(
+                    seg.frac * rereduce_bytes / residual_bytes, seg.schedule))
+        bcast_orders: list[tuple[int, ...]] = []
+        for si, holder, missing, chunks in deliver:
+            ss = self._segstate[si]
+            group_bytes = ss.seg_bytes / ss.schedule.num_chunks * len(chunks)
+            order = (holder,) + missing
+            bcast_orders.append(order)
+            segments.append(Segment(
+                group_bytes / residual_bytes,
+                build_ring_broadcast(list(order), n, root=holder)))
+        residual_prog = CollectiveProgram(
+            f"residual[{prog.name}]", n, segments)
+        residual_prog.validate()
+
+        if self._data is not None:
+            # Re-reduce region: pristine contributions of every chunk final
+            # nowhere, partitioned across the new program's segments the
+            # same way _init_data partitions the initial payload.
+            dest_parts = [self._chunk_dest(si, c)
+                          for si, chunks in rereduce for c in chunks]
+            rr_dest = (np.concatenate(dest_parts) if dest_parts
+                       else np.empty(0, dtype=np.int64))
+            total = len(rr_dest)
+            start = 0
+            if rereduce_bytes > 0.0:
+                for i, seg in enumerate(prog.segments):
+                    end = total if i == len(prog.segments) - 1 else \
+                        start + int(round(seg.frac * total))
+                    d = rr_dest[start:end]
+                    self._append_seg_data(
+                        [self._pristine[r][d] for r in range(n)],
+                        d, None, seg.schedule.num_chunks)
+                    start = end
+            # Delivery groups: the holder's surviving final values ride the
+            # broadcast; only the group's ranks are written back.
+            for (si, holder, missing, chunks), order in zip(
+                    deliver, bcast_orders):
+                d = np.concatenate([self._chunk_dest(si, c) for c in chunks])
+                self._append_seg_data(
+                    [np.concatenate([self._chunk_values(si, c, r)
+                                     for c in chunks]) for r in range(n)],
+                    d, order, len(order))
+            assert len(self._data) == len(self._segstate) + \
+                len(residual_prog.segments)
+
+        self.active_prog = residual_prog
+        self._active_seg_base = len(self._segstate)
+        new = self._instantiate(residual_prog, residual_bytes)
         self._remaining += len(new)
         self._max_iters += 50 * len(new) + 1_000
-        self.replans += 1
         for t in new:
             if t.deps == 0:
                 self._release(now, t)
@@ -691,6 +1020,8 @@ class EventSimulator:
                     self._apply_failure(now, arg, recovering=False)
                 elif kind == "recover":
                     self._apply_failure(now, arg, recovering=True)
+                elif kind == "confirm":
+                    self._confirm_recovery(now, arg)
                 elif kind == "replan":
                     self._do_replan(now, arg)
 
@@ -714,6 +1045,7 @@ class EventSimulator:
             replans=self.replans,
             cancelled_transfers=self.cancelled_transfers,
             repair_events=list(self.repair_events),
+            replan_events=list(self.replan_events),
         )
 
 

@@ -35,6 +35,7 @@ from .scenarios import (  # noqa: F401
     at_iteration,
     campaign_clean_nic_down,
     campaign_flap_storm,
+    campaign_mid_replan,
     campaign_slow_nic,
     clean_nic_down,
     correlated_nic_down,

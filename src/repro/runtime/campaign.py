@@ -121,9 +121,15 @@ def run_campaign(
     ``rank_data`` is given, every iteration moves a fresh copy of the real
     payloads (a new gradient buffer per sync) so conservation is checkable
     across iteration boundaries — including a boundary where a program
-    replanned in iteration k is reused in k+1.  ``capacities`` (with ``g``)
-    replaces the cluster's node egress with explicit per-rank channel
-    capacities, matching ``iteration_time(mode="event")``'s channel model.
+    replanned in iteration k is reused in k+1, and *mid-collective* swaps
+    inside an iteration (the chunk-map residual replan keeps them
+    lossless).  A flap whose recovery is still awaiting its confirming
+    probe tick at an iteration's end stays degraded into the next
+    iteration: the carry re-announces the physical recovery at t=0 and the
+    control plane's (campaign-global) tick decides when it clears.
+    ``capacities`` (with ``g``) replaces the cluster's node egress with
+    explicit per-rank channel capacities, matching
+    ``iteration_time(mode="event")``'s channel model.
     """
     n = cluster.num_nodes
     g_eng = cluster.devices_per_node if g is None else g

@@ -31,10 +31,13 @@ from repro.core.balance import BalancePlan, rebalance
 from repro.core.comm_sim import DETOUR_EFFICIENCY, _strategy_program
 from repro.core.detection import (
     BROADCAST_LATENCY,
+    REPROBE_PERIOD,
+    REPROBE_PERIOD_MAX,
+    REPROBE_PERIOD_MIN,
     FailureDetector,
     adaptive_reprobe_period,
 )
-from repro.core.event_sim import RecoveryDecision
+from repro.core.event_sim import ChunkProgress, RecoveryDecision
 from repro.core.failures import OUT_OF_SCOPE, Failure, FailureState, FailureType
 from repro.core.migration import ROLLBACK_CPU_COST, RegistrationTable
 from repro.core.planner import Collective, Planner, Strategy, collective_payload_factor
@@ -85,6 +88,9 @@ class LedgerEntry:
     backup_nic: tuple[int, int] | None = None
     strategy: str | None = None        # planner choice when replanned
     balance_efficiency: float = 1.0    # residual-capacity factor installed
+    #: fraction of the collective's payload still genuinely missing when a
+    #: replan was planned (from the engine's chunk map); 1.0 = whole payload
+    residual_fraction: float = 1.0
 
     @property
     def total(self) -> float:
@@ -140,6 +146,7 @@ class ControlPlane:
         flap_replan_threshold: int = DEFAULT_FLAP_REPLAN_THRESHOLD,
         flap_window: float = DEFAULT_FLAP_WINDOW,
         replan: bool = True,
+        reprobe_base: float = REPROBE_PERIOD,
         state: FailureState | None = None,
     ):
         self.cluster = cluster
@@ -148,6 +155,16 @@ class ControlPlane:
         self.flap_replan_threshold = flap_replan_threshold
         self.flap_window = float(flap_window)
         self.replan_enabled = replan
+        #: base re-probe cadence; floor/ceiling scale with it so the adaptive
+        #: back-off shape is preserved when a caller rescales the cadence to
+        #: its collective's timescale
+        if reprobe_base <= 0.0:
+            raise ValueError(
+                f"reprobe_base must be > 0 (seconds between probes), got "
+                f"{reprobe_base!r}")
+        self.reprobe_base = float(reprobe_base)
+        self._reprobe_floor = REPROBE_PERIOD_MIN * self.reprobe_base / REPROBE_PERIOD
+        self._reprobe_ceiling = REPROBE_PERIOD_MAX * self.reprobe_base / REPROBE_PERIOD
         self.failure_state = state if state is not None else FailureState()
         self.detector = FailureDetector(self.failure_state)
         self.planner = Planner(cluster)
@@ -178,15 +195,22 @@ class ControlPlane:
 
     def recent_flaps(self, key: tuple[int, int], now: float) -> int:
         """Flaps of ``key`` within the sliding window ending at ``now``.
-        Read-only: does not prune the history."""
+        Read-only: does not prune the history.  Bounded above by ``now`` so
+        a *retrospective* query (reconstructing a past probe tick's cadence
+        in :meth:`observe_physical_recovery`) never counts flaps from that
+        tick's future."""
         cutoff = now - self.flap_window
-        return sum(1 for t in self.flap_history.get(key, ()) if t >= cutoff)
+        return sum(1 for t in self.flap_history.get(key, ())
+                   if cutoff <= t <= now)
 
     def reprobe_period(self, key: tuple[int, int], now: float) -> float:
         """Adaptive re-probe cadence for ``key``: recent flaps back the
         period off exponentially; stable links probe faster than the base
-        constant (floor/ceiling in :mod:`core.detection`)."""
-        return adaptive_reprobe_period(self.recent_flaps(key, now))
+        constant (floor/ceiling in :mod:`core.detection`, rescaled with
+        ``reprobe_base``)."""
+        return adaptive_reprobe_period(
+            self.recent_flaps(key, now), base=self.reprobe_base,
+            floor=self._reprobe_floor, ceiling=self._reprobe_ceiling)
 
     # -- state machine plumbing ---------------------------------------------
     def _transition(self, t: float, state: RecoveryState) -> None:
@@ -220,10 +244,17 @@ class ControlPlane:
         except ValueError:                 # no healthy NICs left on the node
             return None
 
-    def _plan_program(self) -> tuple[CollectiveProgram, str]:
+    def _plan_program(
+        self, payload_bytes: float | None = None,
+    ) -> tuple[CollectiveProgram, str]:
+        """Planner re-selection.  ``payload_bytes`` overrides the configured
+        full payload — a mid-collective replan prices the *residual*
+        collective (the engine's chunk map says how much is genuinely
+        missing), not the whole payload."""
+        payload = self.payload_bytes if payload_bytes is None else payload_bytes
         try:
             plan = self.planner.choose_strategy(
-                self.collective, self.payload_bytes, self.failure_state,
+                self.collective, payload, self.failure_state,
                 g=self.cluster.devices_per_node)
             strat = {
                 Strategy.RING: "ring", Strategy.TREE: "ring",
@@ -243,8 +274,18 @@ class ControlPlane:
         return prog, name
 
     # -- failure path --------------------------------------------------------
-    def handle_failure(self, failure: Failure, now: float) -> RecoveryOutcome | None:
+    def handle_failure(
+        self,
+        failure: Failure,
+        now: float,
+        progress: ChunkProgress | None = None,
+    ) -> RecoveryOutcome | None:
         """Run the recovery pipeline for one failure event at virtual ``now``.
+
+        ``progress`` is the co-simulated engine's chunk-map summary at the
+        failure instant: when a replan is warranted, the planner prices the
+        residual payload (what is genuinely missing) instead of the whole
+        collective, and the ledger records the residual fraction.
 
         Returns None (and records the failure as unsupported) when R2CCL
         cannot act on it — out-of-scope types, or non-escalating hard
@@ -316,23 +357,42 @@ class ControlPlane:
         self._transition(t, RecoveryState.REBALANCED)
 
         # REPLANNED: algorithm re-selection when the diagnosis warrants it.
+        # The chunk map makes it a *residual* replan: the planner prices the
+        # payload still genuinely missing, and the engine will resume the
+        # swapped-in program from the exact chunk state.
         prog: CollectiveProgram | None = None
         strategy: str | None = None
+        replan_payload: float | None = None
+        residual_fraction = 1.0
         need_replan = self.replan_enabled and (
             node_lost
             or self.recent_flaps(failure.nic_key, now) >= self.flap_replan_threshold
         )
         if need_replan:
-            prog, strategy = self._plan_program()
-            stages["replan"] = REPLAN_COMPUTE_COST + BROADCAST_LATENCY
+            if progress is not None and progress.total_bytes > 0:
+                residual_fraction = progress.residual_fraction
+                if progress.residual_bytes > 0:
+                    replan_payload = progress.residual_bytes
+            prog, strategy = self._plan_program(replan_payload)
+            # The mid-collective swap is priced on the residual; the program
+            # carried into *subsequent* collectives moves the full payload
+            # again, so it is re-priced at full size — a second planner
+            # sweep, charged to the replan stage (its strategy may differ
+            # from ``entry.strategy``, which records the swap's choice).
+            sweeps = 1
+            if replan_payload is not None:
+                self.current_program = self._plan_program()[0]
+                sweeps = 2
+            else:
+                self.current_program = prog
+            stages["replan"] = sweeps * REPLAN_COMPUTE_COST + BROADCAST_LATENCY
             t += stages["replan"]
             self._transition(t, RecoveryState.REPLANNED)
-            self.current_program = prog
 
         entry = LedgerEntry(
             failure=failure, t_start=now, stages=stages,
             state_after=self.state, backup_nic=backup, strategy=strategy,
-            balance_efficiency=eff,
+            balance_efficiency=eff, residual_fraction=residual_fraction,
         )
         self.ledger.record(entry)
         scale = {failure.node: eff} if eff < 1.0 else None
@@ -341,10 +401,31 @@ class ControlPlane:
             capacity_scale=scale,
             replan=prog,
             replan_delay=entry.total,
+            replan_payload=replan_payload,
         )
         return RecoveryOutcome(entry=entry, decision=decision)
 
     # -- recovery path -------------------------------------------------------
+    def observe_physical_recovery(self, failure: Failure, now: float) -> float:
+        """A component came back up physically at ``now``; return the virtual
+        time at which the control plane *confirms* it — the next scheduled
+        re-probe tick for this NIC (:attr:`next_reprobe`), so the adaptive
+        cadence shapes recovery latency in the simulated timeline.  Failure
+        state and capacity are cleared at the returned time, not at ``now``
+        (call :meth:`handle_recovery` then).  A NIC with no probe schedule
+        yet (first recovery) is confirmed immediately: the probe that
+        noticed it is the confirming one.  Pure — safe to call repeatedly
+        (a recovery re-announced across iteration boundaries)."""
+        key = failure.nic_key
+        tick = self.next_reprobe.get(key)
+        if tick is None:
+            return now
+        # Probes kept firing every (adaptive) period while the NIC was down;
+        # the confirming tick is the first one at/after the physical event.
+        while tick < now:
+            tick += self.reprobe_period(key, tick)
+        return tick
+
     def handle_recovery(self, failure: Failure, now: float) -> bool:
         """Re-probe success for a previously failed component (flap up,
         repaired NIC).  Returns True when the whole cluster is healthy again
@@ -354,7 +435,7 @@ class ControlPlane:
         key = failure.nic_key
         _, next_probe = self.detector.reprobe(
             key, now, recovered=True,
-            flap_count=self.recent_flaps(key, now))
+            period=self.reprobe_period(key, now))
         self.next_reprobe[key] = next_probe
         if not self.failure_state.failed_nics:
             # Fully healthy again: a replanned program was a reaction to

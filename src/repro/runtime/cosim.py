@@ -38,6 +38,13 @@ class _EngineAdapter:
     multi-iteration campaign runs one engine per gradient sync, each
     starting at t=0, while the persistent control plane's ledger and
     transitions are stamped in campaign-global virtual time.
+
+    Failures carry the engine's chunk map (:class:`ChunkProgress`) into the
+    pipeline so a replan prices the residual collective.  Recoveries are
+    two-phase: ``on_recover`` (the physical event) returns the confirmation
+    time — the control plane's next scheduled probe tick — and the engine
+    calls ``on_recovery_confirmed`` when that tick arrives, which is when
+    the failure state actually clears.
     """
 
     def __init__(self, cp: ControlPlane, offset: float = 0.0):
@@ -46,13 +53,18 @@ class _EngineAdapter:
         self.decisions: list[RecoveryDecision] = []
 
     def on_failure(self, sim, now, failure) -> RecoveryDecision | None:
-        outcome = self.cp.handle_failure(failure, self.offset + now)
+        outcome = self.cp.handle_failure(
+            failure, self.offset + now, progress=sim.chunk_progress())
         if outcome is None:
             return None
         self.decisions.append(outcome.decision)
         return outcome.decision
 
-    def on_recover(self, sim, now, failure) -> None:
+    def on_recover(self, sim, now, failure) -> float:
+        return self.cp.observe_physical_recovery(
+            failure, self.offset + now) - self.offset
+
+    def on_recovery_confirmed(self, sim, now, failure) -> None:
         self.cp.handle_recovery(failure, self.offset + now)
 
 

@@ -229,6 +229,29 @@ def campaign_slow_nic(
              f"{fail_iteration}")
 
 
+def campaign_mid_replan(
+    t_h: float, *, iterations: int = 4, fail_iteration: int = 1,
+    node: int = 1, rail: int = 0, count: int = 4, start_frac: float = 0.15,
+    period_frac: float = 0.18, down_frac: float = 0.05,
+) -> TrainingCampaign:
+    """``count`` flaps of one NIC inside a *single* gradient sync: the flap
+    threshold is crossed mid-collective, so the control plane swaps the
+    program while payload is in flight (the chunk-exact residual replan)
+    and the re-selected program then carries across the iteration boundary
+    into every later sync.  The replan broadcast is a fixed ~1.7 ms
+    pipeline latency, so the collective must be long enough to still be in
+    flight when it lands: use a payload whose healthy time ``t_h`` is at
+    least a millisecond or so."""
+    events = tuple(
+        at_iteration(fail_iteration, f) for f in flap_sequence(
+            node, rail, start=start_frac * t_h, period=period_frac * t_h,
+            down_for=down_frac * t_h, count=count))
+    return TrainingCampaign(
+        "campaign_mid_replan", iterations, events,
+        note=f"{count} flaps of ({node},{rail}) inside iteration "
+             f"{fail_iteration} force a mid-collective replan")
+
+
 def standard_training_campaigns(
     t_h: float, *, iterations: int, num_nodes: int,
 ) -> list[TrainingCampaign]:

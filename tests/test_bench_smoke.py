@@ -72,7 +72,9 @@ def test_training_bench_tiny_campaign():
 
 def test_runtime_bench_tiny_campaign_sweep():
     """The bench_runtime campaign sweep rows (clean / flap storm / slow
-    NIC over 3 iterations) must be emitted with ledger totals."""
+    NIC over 3 iterations) must be emitted with ledger totals, and the
+    mid-collective replan scenario (payload-conserving program swap) must
+    report its retransmission/residual accounting."""
     bench_main(["--only", "runtime", "--tiny"])
     rows = _rows("runtime_recovery")
     for name in ("campaign_clean_nic_down", "campaign_flap_storm",
@@ -81,3 +83,9 @@ def test_runtime_bench_tiny_campaign_sweep():
         assert rows[f"{name}_ledger_total"] > 0.0
     # comm-only overhead: the repair window dominates at tiny payloads
     assert rows["campaign_clean_nic_down_overhead"] > 0.0
+    # mid-collective replan row: the swap really happened with payloads
+    # attached, the chunk map priced a sane residual, and nothing was lost
+    assert rows["mid_replan_count"] >= 1.0
+    assert rows["mid_replan_retrans_bytes"] >= 0.0
+    assert 0.0 < rows["mid_replan_residual_fraction"] <= 1.0
+    assert rows["mid_replan_payload_max_error"] < 1e-9

@@ -34,6 +34,7 @@ from repro.runtime import (
     at_iteration,
     campaign_clean_nic_down,
     campaign_flap_storm,
+    campaign_mid_replan,
     parse_training_campaign,
     run_campaign,
     training_campaign_report,
@@ -125,14 +126,68 @@ def test_state_carries_over_iterations(cluster, t_h):
 def test_flap_storm_across_iterations_replans(cluster, t_h):
     """Flaps spread one-per-iteration only cross the replan threshold
     because the flap window spans gradient syncs; the adapted program then
-    sticks while the NIC remains a known flapper."""
+    sticks while the NIC remains a known flapper.
+
+    Repeat recoveries are only *confirmed* at the NIC's next scheduled
+    re-probe tick, so the probe cadence is rescaled to the collective's
+    timescale — at the default ~1 s base the ticks would land far beyond
+    this sub-millisecond campaign and the NIC would stay administratively
+    down (terminal REPLANNED instead of HEALTHY)."""
+    cp = ControlPlane(cluster, payload_bytes=PAYLOAD, reprobe_base=0.5 * t_h)
     rep = run_campaign(campaign_flap_storm(t_h, iterations=6), cluster,
-                       PAYLOAD, healthy_time=t_h)
+                       PAYLOAD, healthy_time=t_h, control_plane=cp)
     assert any("replan" in e.stages for e in rep.ledger.entries)
     assert any(it.program_source == "replanned" for it in rep.iterations)
-    # every flap recovered -> campaign ends healthy
+    # every flap recovered and was re-probed -> campaign ends healthy
     assert rep.final_state is RecoveryState.HEALTHY
     assert not rep.iterations[-1].state_after.failed_nics
+
+
+def test_unconfirmed_recovery_defers_to_probe_tick(cluster, t_h):
+    """The default (unscaled) cadence on the same storm: the second and
+    later flap recoveries cannot be confirmed inside the campaign, so the
+    failure state persists to the end — the regression the rescaled test
+    above guards from the other side."""
+    rep = run_campaign(campaign_flap_storm(t_h, iterations=6), cluster,
+                       PAYLOAD, healthy_time=t_h)
+    assert rep.final_state is RecoveryState.REPLANNED
+    assert rep.iterations[-1].state_after.failed_nics
+
+
+def test_mid_collective_replan_carries_across_boundary(cluster):
+    """Satellite of the chunk-map replan (PR 4): a flap storm inside one
+    gradient sync swaps the program *mid-collective* with real payloads in
+    flight; the residual resumes chunk-exactly, the re-selected program is
+    reused from iteration k+1, and every iteration's AllReduce stays exact.
+    Needs a payload whose collective outlives the ~1.7 ms replan broadcast
+    latency, hence the larger-than-module payload here."""
+    payload = 100e6
+    t_big = simulate_program(ring_program(list(range(4)), 4), payload,
+                             cluster=cluster).completion_time
+    data = _data(4)
+    want = np.sum(np.stack(data), axis=0)
+    cp = ControlPlane(cluster, payload_bytes=payload,
+                      reprobe_base=0.5 * t_big)
+    rep = run_campaign(campaign_mid_replan(t_big, iterations=4), cluster,
+                       payload, healthy_time=t_big, rank_data=data,
+                       control_plane=cp)
+    mid = rep.iterations[1]
+    assert mid.report.replans >= 1                # swapped while in flight
+    assert mid.report.replan_events
+    for ev in mid.report.replan_events:
+        assert 0.0 < ev.residual_fraction <= 1.0
+        assert ev.residual_bytes == pytest.approx(
+            ev.rereduce_bytes + ev.deliver_bytes)
+    # the replanned program carries into the next iteration from a clean
+    # start, and payloads are conserved on both sides of the boundary
+    assert rep.iterations[2].program_source == "replanned"
+    for it in rep.iterations:
+        for r in it.report.rank_data:
+            np.testing.assert_allclose(r, want, atol=1e-9)
+    # the ledger recorded the mid-collective pipelines' residual view
+    replans = [e for e in rep.ledger.entries if "replan" in e.stages]
+    assert replans and all(0.0 <= e.residual_fraction <= 1.0
+                           for e in replans)
 
 
 def test_payload_conservation_across_replan_boundary(cluster, t_h):

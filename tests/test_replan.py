@@ -1,0 +1,405 @@
+"""Payload-conserving mid-collective replan (PR 4 acceptance).
+
+The event engine tracks a per-rank, per-chunk completion map; a control
+plane swapping in a new ``CollectiveProgram`` mid-collective resumes from
+the exact chunk state: settled chunks are retained, chunks final at some
+rank are broadcast to the ranks missing them, and chunks final nowhere roll
+back to pristine contributions and re-reduce under the new program.  These
+tests pin:
+
+  * exact AllReduce results with ``rank_data`` *through* a replan (the old
+    ``EventSimError`` refusal is gone), across algorithm pairs, random
+    failure times, and chunk counts (propcheck);
+  * the chunk-exact byte accounting that replaces the scalar ``frac_done``
+    approximation (which re-included partially-streamed bytes in the
+    remaining payload while also charging them as retransmitted);
+  * ``segment_finish`` preservation across a swap;
+  * residual threading into the planner (``ChunkProgress`` →
+    ``RecoveryDecision.replan_payload`` / ``LedgerEntry.residual_fraction``);
+  * the re-probe cadence shaping recovery latency (clearance deferred to
+    the next scheduled probe tick).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allreduce import build_r2ccl_all_reduce
+from repro.core.event_sim import (
+    _DONE,
+    ChunkProgress,
+    EventSimulator,
+    RecoveryDecision,
+    predict_ring_all_reduce,
+    simulate_program,
+)
+from repro.core.executor_np import all_reduce_oracle
+from repro.core.failures import link_flap, slow_nic
+from repro.core.schedule import CollectiveProgram, ring_program, tree_program
+from repro.core.topology import make_cluster
+from repro.runtime import (
+    ControlPlane,
+    flap_storm,
+    parse_campaign,
+    run_scenario,
+)
+
+BW = 50e9
+
+
+def _data(n, size, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=size) for _ in range(n)]
+
+
+def _program(kind, n):
+    if kind == "ring":
+        return ring_program(list(range(n)), n)
+    if kind == "tree":
+        return tree_program(list(range(n)), n)
+    prog, _ = build_r2ccl_all_reduce(list(range(n)), 1, x=0.6, g=8)
+    return prog
+
+
+class _ForceReplan:
+    """Stub control plane: swap in ``newprog`` on the first failure event.
+
+    ``delay=0`` by default: at property-test payload sizes a microsecond of
+    pipeline latency can outlive the whole collective."""
+
+    def __init__(self, newprog, delay=0.0):
+        self.newprog = newprog
+        self.delay = delay
+        self.fired = False
+        self.progress = None
+
+    def on_failure(self, sim, now, failure):
+        if self.fired:
+            return None
+        self.fired = True
+        self.progress = sim.chunk_progress()
+        return RecoveryDecision(repair_latency=1e-5, replan=self.newprog,
+                                replan_delay=self.delay)
+
+    def on_recover(self, sim, now, failure):
+        return None
+
+
+def _run_with_replan(src_kind, dst_kind, n, size, frac, seed):
+    """One collective of ``src_kind`` with a forced swap to ``dst_kind`` at
+    ``frac`` of the healthy time; returns (sim, report, oracle)."""
+    prog = _program(src_kind, n)
+    payload = size * 8.0
+    healthy = simulate_program(prog, payload,
+                               capacities=[BW] * n).completion_time
+    data = _data(n, size, seed)
+    # a slow NIC triggers the controller without any rollback of its own,
+    # so the swap is the only recovery mechanism in play
+    sim = EventSimulator(
+        prog, payload, capacities=[BW] * n,
+        rank_data=[d.copy() for d in data],
+        failures=[slow_nic(0, 0, frac * healthy, lost_fraction=0.3)],
+        controller=_ForceReplan(_program(dst_kind, n)))
+    rep = sim.run()
+    return sim, rep, all_reduce_oracle(data)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: exact allreduce through a mid-collective swap
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src,dst", [
+    ("ring", "tree"), ("tree", "ring"),
+    ("r2ccl", "ring"), ("ring", "r2ccl"),
+])
+@pytest.mark.parametrize("frac", [0.15, 0.45, 0.75])
+def test_mid_replan_exact_allreduce(src, dst, frac):
+    sim, rep, want = _run_with_replan(src, dst, n=6, size=150, frac=frac,
+                                      seed=11)
+    assert rep.replans == 1
+    ev = rep.replan_events[0]
+    assert 0.0 <= ev.residual_fraction <= 1.0 + 1e-12
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+def test_two_swaps_stay_lossless():
+    """A second replan lands on the first replan's residual program: the
+    chunk map must compose across swaps."""
+    n, size = 5, 120
+    prog = ring_program(list(range(n)), n)
+    payload = size * 8.0
+    healthy = simulate_program(prog, payload,
+                               capacities=[BW] * n).completion_time
+
+    class Twice:
+        def __init__(self):
+            self.count = 0
+
+        def on_failure(self, sim, now, failure):
+            self.count += 1
+            target = tree_program(list(range(n)), n) if self.count == 1 \
+                else ring_program(list(range(n)), n)
+            return RecoveryDecision(repair_latency=1e-5, replan=target,
+                                    replan_delay=1e-6)
+
+        def on_recover(self, sim, now, failure):
+            return None
+
+    data = _data(n, size, seed=4)
+    rep = simulate_program(
+        prog, payload, capacities=[BW] * n,
+        rank_data=[d.copy() for d in data],
+        failures=[slow_nic(0, 0, 0.3 * healthy, lost_fraction=0.3),
+                  slow_nic(1, 0, 0.6 * healthy, lost_fraction=0.3)],
+        controller=Twice())
+    assert rep.replans == 2
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# property (offline shim): random failure time x chunk count x algorithm pair
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(3, 8),                 # chunk count of the ring = n
+    size=st.integers(8, 200),
+    seed=st.integers(0, 99),
+    frac=st.floats(0.05, 0.95),
+    pair=st.sampled_from([("ring", "tree"), ("tree", "ring"),
+                          ("ring", "ring"), ("r2ccl", "ring"),
+                          ("ring", "r2ccl")]),
+)
+def test_replan_conservation_property(n, size, seed, frac, pair):
+    src, dst = pair
+    sim, rep, want = _run_with_replan(src, dst, n, size, frac, seed)
+    assert rep.replans == 1
+    for d in rep.rank_data:                       # losslessness through swap
+        np.testing.assert_allclose(d, want, atol=1e-9)
+    # moved-byte conservation: everything on the wire is either a completed
+    # transfer or explicitly accounted retransmission waste
+    useful = sum(t.size for t in sim.transfers if t.state == _DONE)
+    assert sum(rep.link_bytes.values()) == \
+        pytest.approx(useful + rep.retransmitted_bytes, rel=1e-9)
+    ev = rep.replan_events[0]
+    assert ev.residual_bytes == pytest.approx(
+        ev.rereduce_bytes + ev.deliver_bytes)
+    assert ev.residual_bytes <= size * 8.0 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# regression: the scalar frac_done double-charge
+# ---------------------------------------------------------------------------
+
+def test_replan_accounting_is_chunk_exact_not_scalar():
+    """The frac_done double-charge regression.  A two-segment program where
+    the small segment settles before the swap: the chunk-exact residual must
+    exclude the settled segment entirely, while the old scalar accounting —
+    ``total * (1 - done_work/total_work)`` with ``done_work`` counting only
+    ``_DONE`` transfers — collapses per-segment progress into one number,
+    re-including payload that already settled (and, with partially-streamed
+    transfers cancelled, charging their bytes simultaneously as
+    retransmitted and as remaining).  The moved = useful + retransmitted
+    identity must hold exactly, and the data must stay exact."""
+    from repro.core.schedule import Segment, build_ring_all_reduce
+
+    n, size = 6, 600
+    payload = size * 8.0
+    sched = build_ring_all_reduce(list(range(n)), n)
+    prog = CollectiveProgram(
+        "two_seg_ring", n, [Segment(0.25, sched), Segment(0.75, sched)])
+    # find when the small segment settles vs when the run ends
+    probe = simulate_program(prog, payload, capacities=[BW] * n)
+    t_small, t_all = probe.segment_finish[0], probe.completion_time
+    assert t_small < t_all
+    t_fail = 0.5 * (t_small + t_all)       # segment 0 settled, 1 in flight
+
+    data = _data(n, size, seed=2)
+    sim = EventSimulator(
+        prog, payload, capacities=[BW] * n,
+        rank_data=[d.copy() for d in data],
+        failures=[slow_nic(0, 0, t_fail, lost_fraction=0.2)],
+        controller=_ForceReplan(ring_program(list(range(n)), n)))
+    rep = sim.run()
+    assert rep.replans == 1
+    ev = rep.replan_events[0]
+    # chunk-exact: the settled 25% segment is not part of the residual
+    assert 0.0 < ev.residual_bytes <= 0.75 * payload * (1 + 1e-9)
+    # the scalar approximation would have sized the residual differently
+    # (it cannot exclude the settled segment: transfer-work fractions and
+    # chunk coverage disagree mid-flight)
+    total_work = sum(t.size for t in sim.transfers
+                     if t.seg < len(prog.segments))
+    scalar_rem = payload * (1.0 - ev.done_bytes / total_work)
+    assert ev.residual_bytes != pytest.approx(scalar_rem, rel=1e-3)
+    # moved = useful + retransmitted, exactly
+    useful = sum(t.size for t in sim.transfers if t.state == _DONE)
+    assert sum(rep.link_bytes.values()) == \
+        pytest.approx(useful + rep.retransmitted_bytes, rel=1e-9)
+    # and the result is still exact
+    want = all_reduce_oracle(data)
+    for d in rep.rank_data:
+        np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+def test_segment_finish_preserved_across_replan():
+    """Regression: _do_replan used to reset ``segment_finish`` to zeros of
+    the new program's length, erasing the finish timestamps of segments
+    completed before the swap."""
+    n, size = 6, 300
+    payload = size * 8.0
+    prog = ring_program(list(range(n)), n)
+    healthy = predict_ring_all_reduce(n, payload, BW)
+    sim = EventSimulator(
+        prog, payload, capacities=[BW] * n,
+        failures=[slow_nic(0, 0, 0.5 * healthy, lost_fraction=0.2)],
+        controller=_ForceReplan(tree_program(list(range(n)), n)))
+    rep = sim.run()
+    assert rep.replans == 1
+    # the superseded program's segment keeps its (partial) finish timestamp,
+    # and the residual program's segments are appended after it
+    assert len(rep.segment_finish) > len(prog.segments)
+    assert rep.segment_finish[0] > 0.0
+    assert rep.segment_finish[0] < rep.completion_time
+
+
+# ---------------------------------------------------------------------------
+# residual threading into the control plane / planner
+# ---------------------------------------------------------------------------
+
+def test_chunk_progress_reaches_planner_decision():
+    """The engine's chunk map must reach the pipeline: a replan is priced on
+    the residual payload, recorded in the ledger, and echoed in the
+    decision."""
+    cluster = make_cluster(4, 4, nic_bandwidth=25e9)
+    cp = ControlPlane(cluster, payload_bytes=1e8)
+    progress = ChunkProgress(total_bytes=1e8, rereduce_bytes=1.5e7,
+                             deliver_bytes=0.5e7)
+    outs = [cp.handle_failure(link_flap(1, 0, t, 0.01), now=t,
+                              progress=progress)
+            for t in (0.0, 1.0, 2.0)]
+    replanned = outs[-1]
+    assert "replan" in replanned.entry.stages
+    assert replanned.decision.replan is not None
+    assert replanned.decision.replan_payload == pytest.approx(2e7)
+    assert replanned.entry.residual_fraction == pytest.approx(0.2)
+    # entries that did not replan keep the default full fraction
+    assert outs[0].entry.residual_fraction == 1.0
+    # the program carried into subsequent (full-payload) collectives is
+    # still installed
+    assert cp.current_program is not None
+
+
+def test_cosim_flap_storm_with_payloads_is_lossless():
+    """The acceptance path: the closed-loop co-simulation replans
+    mid-collective with real payloads attached — the old EventSimError
+    refusal is gone and the collective result is exact."""
+    cluster = make_cluster(4, 4, nic_bandwidth=25e9)
+    payload = 100e6
+    t_h = simulate_program(ring_program(list(range(4)), 4), payload,
+                           cluster=cluster).completion_time
+    data = _data(4, 64, seed=9)
+    want = np.sum(np.stack(data), axis=0)
+    rep = run_scenario(flap_storm(t_h, count=4), cluster, payload,
+                       healthy_time=t_h, rank_data=data)
+    assert rep.report.replans >= 1
+    assert rep.report.replan_events
+    for r in rep.report.rank_data:
+        np.testing.assert_allclose(r, want, atol=1e-9)
+    # the ledger recorded the replans' residual view
+    replans = [e for e in rep.ledger.entries if "replan" in e.stages]
+    assert replans
+    assert all(0.0 <= e.residual_fraction <= 1.0 for e in replans)
+
+
+# ---------------------------------------------------------------------------
+# re-probe cadence shapes recovery latency (deferred clearance)
+# ---------------------------------------------------------------------------
+
+def test_slower_reprobe_cadence_lengthens_degradation():
+    """A repeat recovery is only confirmed at the NIC's next scheduled probe
+    tick: with a slower cadence the rail stays administratively down longer,
+    so the observed degradation window — and the collective — stretches."""
+    cluster = make_cluster(4, 4, nic_bandwidth=25e9)
+    payload = 100e6
+    t_h = simulate_program(ring_program(list(range(4)), 4), payload,
+                           cluster=cluster).completion_time
+    # two flaps of the same NIC: the first recovery schedules the probe, the
+    # second recovery must wait for the tick (no replan: 2 < threshold)
+    sc = parse_campaign(
+        "double_flap",
+        "flap node=1 rail=0 at=0.15 down=0.05; "
+        "flap node=1 rail=0 at=0.45 down=0.05",
+        t_scale=t_h)
+    times = {}
+    for name, base in [("fast", 0.1 * t_h), ("slow", 3.0 * t_h)]:
+        cp = ControlPlane(cluster, payload_bytes=payload, reprobe_base=base)
+        rep = run_scenario(sc, cluster, payload, healthy_time=t_h,
+                           control_plane=cp)
+        times[name] = rep.report.completion_time
+    assert times["slow"] > times["fast"] * (1 + 1e-6)
+
+
+def test_confirm_tick_does_not_clear_refailed_rail():
+    """A confirmation pending from flap 1 must not report recovery if the
+    same rail went down again (flap 2) before the tick: the probe observes
+    the rail's current state, and only flap 2's own confirmation clears."""
+    n = 4
+    prog = ring_program(list(range(n)), n)
+    payload = 4000 * 8.0
+    healthy = predict_ring_all_reduce(n, payload, BW)
+    t1, t1_up = 0.10 * healthy, 0.15 * healthy
+    t2, t2_up = 0.20 * healthy, 0.30 * healthy
+    tick1 = 0.25 * healthy                 # flap 1 confirm: inside flap 2
+    confirmed = []
+
+    class Stub:
+        def on_failure(self, sim, now, f):
+            return None
+
+        def on_recover(self, sim, now, f):
+            # flap 1's physical recovery defers to tick1; flap 2 confirms
+            # immediately on its own recovery
+            return tick1 if f.at_time == t1 else now
+
+        def on_recovery_confirmed(self, sim, now, f):
+            confirmed.append((now, f.at_time))
+
+    rep = simulate_program(
+        prog, payload, capacities=[BW] * n,
+        failures=[link_flap(1, 0, t1, t1_up - t1),
+                  link_flap(1, 0, t2, t2_up - t2)],
+        controller=Stub())
+    assert rep.completion_time > 0
+    # only flap 2's confirmation reported a recovery; flap 1's tick landed
+    # while the rail was down again and was swallowed
+    assert [f_at for _, f_at in confirmed] == [t2]
+
+
+def test_reprobe_base_must_be_positive():
+    with pytest.raises(ValueError):
+        ControlPlane(make_cluster(2, 2), reprobe_base=0.0)
+    with pytest.raises(ValueError):
+        ControlPlane(make_cluster(2, 2), reprobe_base=-1.0)
+
+
+def test_first_recovery_confirms_immediately():
+    """A NIC with no probe schedule yet is confirmed by the probe that
+    noticed it: single-flap campaigns keep their instantaneous-recovery
+    timeline (and their HEALTHY terminal state)."""
+    cluster = make_cluster(4, 4, nic_bandwidth=25e9)
+    cp = ControlPlane(cluster, payload_bytes=1e8)
+    f = link_flap(1, 0, 0.0, 0.01)
+    assert cp.observe_physical_recovery(f, 0.01) == 0.01
+    cp.handle_failure(f, now=0.0)
+    cp.handle_recovery(f, now=0.01)
+    # now a schedule exists: the next physical recovery waits for the tick
+    tick = cp.observe_physical_recovery(f, 0.02)
+    assert tick == cp.next_reprobe[(1, 0)]
+    assert tick > 0.02
+    # and a recovery *after* that tick rolls forward to the next one
+    late = cp.observe_physical_recovery(f, tick + 0.5)
+    assert late >= tick + 0.5
