@@ -9,6 +9,11 @@ and one row per pipeline stage — the stage budget the paper's low-ms
 hot-repair figure decomposes into.  The clean single-NIC-down ledger total
 is checked against the alpha-beta ``R2CCL_MIGRATION_LATENCY`` constant
 (conformance row: ratio must be within 2x).
+
+Contention rows (``multi_stream_*``, ``nic_down_contended_*``,
+``stream_priority_*``) co-simulate the DP gradient sync with concurrent
+TP/PP streams on the shared NICs — healthy multi-stream conformance,
+NIC-down with/without co-running traffic, and a stream-priority sweep.
 """
 
 from __future__ import annotations
@@ -22,10 +27,12 @@ from repro.core.schedule import ring_program
 from repro.core.topology import make_cluster
 from repro.runtime import (
     Scenario,
+    clean_nic_down,
     flap_storm,
     run_campaign,
     run_scenario,
     standard_campaigns,
+    standard_parallel_streams,
     standard_training_campaigns,
 )
 
@@ -102,6 +109,51 @@ def run(tiny: bool = False, seed: int = 0) -> None:
           "payload genuinely missing at the first swap (chunk map)")
     r.row("mid_replan_payload_max_error", err,
           "max |allreduce - oracle| through the swap; ~0 = lossless")
+
+    # --- concurrent TP/PP/DP streams sharing NICs (contention rows) ---------
+    # Real training parallelism runs three collective streams at once over
+    # the same fabric: the DP gradient sync, the TP activation AllReduce,
+    # and the PP activation handoff.  The multi-stream engine co-simulates
+    # them under weighted max-min fairness, so every row below prices the
+    # recovery machinery in a *loaded* network instead of an empty one.
+    specs = standard_parallel_streams(payload)
+    sdata = [rng.normal(size=128) for _ in range(servers)]
+    want_sum = np.sum(np.stack(sdata), axis=0)
+
+    healthy_multi = run_scenario(
+        Scenario("multi_stream_healthy", ()), cluster, payload,
+        healthy_time=t_h, rank_data=sdata, streams=specs)
+    dp_contended = healthy_multi.report.streams["dp"].completion_time
+    r.row("multi_stream_healthy_dp_slowdown", dp_contended / t_h,
+          "DP sync finish under TP+PP contention vs alone; >=1 by fairness")
+    serr = max(
+        max(float(np.max(np.abs(np.asarray(d) - want_sum)))
+            for d in healthy_multi.report.streams[name].rank_data)
+        for name in ("dp", "tp"))
+    serr = max(serr, max(
+        float(np.max(np.abs(np.asarray(d) - sdata[0])))
+        for d in healthy_multi.report.streams["pp"].rank_data))
+    r.row("multi_stream_payload_max_error", serr,
+          "max per-stream |result - oracle| across DP/TP/PP; ~0 = exact")
+
+    # NIC-down with vs without co-running streams: the same failure costs
+    # more when the rebalanced capacity is shared with live TP/PP traffic.
+    solo_fail = reps["clean_nic_down"].report.completion_time
+    cont = run_scenario(clean_nic_down(t_h, node=min(1, servers - 1)),
+                        cluster, payload, healthy_time=t_h, streams=specs)
+    cont_dp = cont.report.streams["dp"].completion_time
+    r.row("nic_down_contended_dp_time", cont_dp,
+          f"DP sync under TP+PP contention; solo={solo_fail:.3g}s")
+    r.row("nic_down_contention_ratio", cont_dp / solo_fail,
+          "contended / solo NIC-down completion of the DP sync; >=1")
+
+    # Stream-priority sweep: weighting the DP sync up must buy it back
+    # bandwidth from the co-runners (weighted max-min fair share).
+    hi = run_scenario(Scenario("multi_stream_prio", ()), cluster, payload,
+                      healthy_time=t_h, streams=specs, priority=4.0)
+    hi_dp = hi.report.streams["dp"].completion_time
+    r.row("stream_priority_dp_speedup", dp_contended / hi_dp,
+          "DP finish at priority 1x / priority 4x under contention; >1")
 
     # --- multi-iteration campaign sweep (paper Figs. 7-10 unit) -------------
     # N gradient syncs back-to-back through ONE persistent control plane:

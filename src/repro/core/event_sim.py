@@ -58,6 +58,22 @@ Model
   attached, the capacity is only restored once the controller confirms it
   — at its next scheduled re-probe tick — so the probe cadence shapes
   recovery latency in the simulated timeline.
+* The engine is **multi-stream**: one instance co-simulates a set of named
+  :class:`Stream`\\ s (e.g. the TP activation AllReduce, the PP activation
+  handoff, and the DP gradient sync of one training iteration), every
+  stream's transfers sharing the same max-min fair per-link bandwidth
+  model — cross-stream contention emerges from exactly the fairness code
+  path that a single program's concurrent segments already use.  Streams
+  carry a ``priority`` (weighted max-min fair share), a ``start_time``,
+  and their own ``rank_data``; completion, rollback/retransmit, and
+  replan accounting are kept per stream (:class:`StreamReport`) with the
+  report's original scalars preserved as the cross-stream sums.  A
+  failure rolls back in-flight transfers of *every* stream riding the
+  dead rail, and a control-plane ``capacity_scale`` (rebalance detour
+  efficiency) re-prices every stream crossing the rank — the shared-NIC
+  physics, not a per-collective view.  A mid-collective replan is
+  stream-scoped (:attr:`RecoveryDecision.replan_stream`): only the target
+  stream's program is swapped while co-running streams keep flowing.
 
 The engine reports per-collective completion time, per-link bytes,
 per-rank egress utilization, and retransmitted bytes after failover.
@@ -113,6 +129,8 @@ class _Transfer:
     remaining: float = 0.0
     payload: np.ndarray | None = None
     dependents: list[int] = dataclasses.field(default_factory=list)
+    stream: int = 0              # owning stream index
+    weight: float = 1.0          # stream priority (weighted fair share)
 
 
 @dataclasses.dataclass
@@ -132,6 +150,7 @@ class _SegState:
     needed: tuple[int, ...]
     writers_left: np.ndarray              # (n, num_chunks) int
     retired: bool = False                 # superseded by a replan
+    stream: int = 0                       # owning stream index
 
 
 @dataclasses.dataclass
@@ -175,6 +194,10 @@ class RecoveryDecision:
     #: residual (not-yet-settled) bytes at the failure instant, when the
     #: chunk map was threaded through; None = planned for the full payload
     replan_payload: float | None = None
+    #: name of the stream ``replan`` swaps the program of (a control plane
+    #: manages one collective; co-running streams keep flowing); None = the
+    #: engine's primary (first) stream
+    replan_stream: str | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +247,8 @@ class ReplanEvent:
     done_bytes: float
     #: unfinished transfers of the superseded program cancelled at the swap
     cancelled: int
+    #: name of the stream whose program was swapped
+    stream: str = "main"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -236,15 +261,95 @@ class RepairEvent:
     derived: bool                # True = delay came from a controller pipeline
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class Stream:
+    """One named collective stream co-scheduled on the shared fabric.
+
+    A training iteration's concurrent parallelism traffic is a set of
+    streams — e.g. the TP activation AllReduce, the PP activation handoff,
+    and the DP gradient sync — each with its own
+    :class:`~repro.core.schedule.CollectiveProgram`, payload, optional real
+    ``rank_data``, a ``priority`` weight in the max-min fair bandwidth
+    share, and a ``start_time`` offsetting its release into the timeline.
+    All streams of one engine must have the same rank count (they share
+    the NICs of the same nodes).
+    """
+
+    name: str
+    program: CollectiveProgram
+    payload_bytes: float
+    priority: float = 1.0
+    start_time: float = 0.0
+    rank_data: Sequence[np.ndarray] | None = None
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """One stream's view of a multi-stream run.
+
+    The parent :class:`EventSimReport`'s scalar aggregates
+    (``retransmitted_bytes``, ``failovers``, ``replans``,
+    ``cancelled_transfers``) are exactly the sums of these per-stream
+    breakdowns.
+    """
+
+    name: str
+    payload_bytes: float
+    priority: float
+    start_time: float
+    #: absolute finish time of the stream's last completed transfer
+    completion_time: float
+    transfers: int
+    #: bytes this stream put on the wire, retransmission waste included —
+    #: equals completed-transfer bytes + retransmitted_bytes, and the
+    #: cross-stream sum equals sum(report.link_bytes.values())
+    moved_bytes: float
+    retransmitted_bytes: float
+    failovers: int
+    replans: int
+    cancelled_transfers: int
+    replan_events: list[ReplanEvent]
+    #: final per-rank buffers when the stream carried ``rank_data``
+    rank_data: list[np.ndarray] | None = None
+
+
+@dataclasses.dataclass
+class _StreamState:
+    """Engine-internal mutable state of one stream."""
+
+    index: int
+    spec: Stream
+    prog: CollectiveProgram               # active (possibly residual) program
+    #: absolute segment indices owned by this stream, in creation order
+    seg_ids: list[int] = dataclasses.field(default_factory=list)
+    #: index into ``seg_ids`` of the active program's first segment
+    #: (advances at every replan of this stream)
+    active_seg_start: int = 0
+    remaining: int = 0                    # unfinished transfers
+    finish_time: float = 0.0
+    transfers: int = 0
+    moved_bytes: float = 0.0
+    retransmitted_bytes: float = 0.0
+    failovers: int = 0
+    replans: int = 0
+    cancelled: int = 0
+    replan_events: list[ReplanEvent] = dataclasses.field(default_factory=list)
+    has_data: bool = False
+    #: pristine per-rank contributions (replan rollback target)
+    pristine: list[np.ndarray] | None = None
+    orig_total: int = 0
+
+
 @dataclasses.dataclass
 class EventSimReport:
-    """What one simulated collective did."""
+    """What one simulated collective (or set of concurrent streams) did."""
 
     completion_time: float
     #: absolute finish time of each segment's last transfer, cumulative
-    #: across program swaps: the initial program's segments first, then each
-    #: replanned residual program's, in instantiation order.  Timestamps of
-    #: segments that finished before a replan are preserved, not reset.
+    #: across streams and program swaps: every stream's initial program
+    #: segments first (stream declaration order), then each replanned
+    #: residual program's, in instantiation order.  Timestamps of segments
+    #: that finished before a replan are preserved, not reset.
     segment_finish: list[float]
     #: bytes moved per directed (src, dst) rank pair, retransmissions included
     link_bytes: dict[tuple[int, int], float]
@@ -265,7 +370,13 @@ class EventSimReport:
     #: per-hard-failure hot-repair record, in virtual-time order
     repair_events: list[RepairEvent] = dataclasses.field(default_factory=list)
     #: per-swap chunk-exact residual accounting, in virtual-time order
+    #: (all streams; each event names its stream)
     replan_events: list[ReplanEvent] = dataclasses.field(default_factory=list)
+    #: per-stream breakdown, in stream declaration order; the scalar
+    #: aggregates above are the sums across these.  A single-program run
+    #: has exactly one entry named "main", and the report-level
+    #: ``rank_data`` is the primary (first) stream's
+    streams: dict[str, StreamReport] = dataclasses.field(default_factory=dict)
 
 
 # ---------------------------------------------------------------------------
@@ -347,7 +458,11 @@ class _Capacities:
 
 
 def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
-    """Max-min fair rates under per-rank tx and rx capacity (water-filling)."""
+    """Weighted max-min fair rates under per-rank tx and rx capacity
+    (water-filling).  A flow's weight is its stream's priority; with all
+    weights 1.0 this is bit-identical to the unweighted progressive fill
+    (weight sums equal flow counts, and ``1.0 * share == share``), so the
+    single-stream engine's timings are unchanged by the weighting."""
     rates: dict[int, float] = {}
     remaining = list(flows)
     avail: dict[tuple[str, int], float] = {}
@@ -355,19 +470,20 @@ def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
         avail.setdefault(("tx", f.src), cap(f.src))
         avail.setdefault(("rx", f.dst), cap(f.dst))
     while remaining:
-        counts: dict[tuple[str, int], int] = {}
+        weights: dict[tuple[str, int], float] = {}
         for f in remaining:
-            counts[("tx", f.src)] = counts.get(("tx", f.src), 0) + 1
-            counts[("rx", f.dst)] = counts.get(("rx", f.dst), 0) + 1
-        bottleneck = min(counts, key=lambda k: avail[k] / counts[k])
-        share = max(0.0, avail[bottleneck] / counts[bottleneck])
+            weights[("tx", f.src)] = weights.get(("tx", f.src), 0.0) + f.weight
+            weights[("rx", f.dst)] = weights.get(("rx", f.dst), 0.0) + f.weight
+        bottleneck = min(weights, key=lambda k: avail[k] / weights[k])
+        share = max(0.0, avail[bottleneck] / weights[bottleneck])
         frozen = [f for f in remaining
                   if (bottleneck[0] == "tx" and f.src == bottleneck[1])
                   or (bottleneck[0] == "rx" and f.dst == bottleneck[1])]
         for f in frozen:
-            rates[f.tid] = share
-            avail[("tx", f.src)] -= share
-            avail[("rx", f.dst)] -= share
+            r = f.weight * share
+            rates[f.tid] = r
+            avail[("tx", f.src)] -= r
+            avail[("rx", f.dst)] -= r
         remaining = [f for f in remaining if f.tid not in rates]
     return rates
 
@@ -377,13 +493,21 @@ def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
 # ---------------------------------------------------------------------------
 
 class EventSimulator:
-    """One collective program, executed on an absolute-time event queue."""
+    """A set of collective streams, executed on one absolute-time event queue.
+
+    Constructed either from a single ``(prog, total_bytes[, rank_data])``
+    — wrapped into one stream named ``"main"``, behaviorally identical to
+    the pre-multi-stream engine — or from ``streams=`` (a sequence of
+    :class:`Stream`), all sharing the cluster's NICs under weighted
+    max-min fairness.
+    """
 
     def __init__(
         self,
-        prog: CollectiveProgram,
-        total_bytes: float,
+        prog: CollectiveProgram | None = None,
+        total_bytes: float | None = None,
         *,
+        streams: Sequence[Stream] | None = None,
         cluster: ClusterTopology | None = None,
         capacities: Sequence[float] | None = None,
         g: int = 8,
@@ -395,39 +519,82 @@ class EventSimulator:
         initial_failures: Sequence[
             tuple[Failure, Mapping[int, float] | None]] = (),
     ):
-        prog.validate()
-        self.prog = prog
-        self.active_prog = prog           # replaced on a mid-collective replan
-        self.total_bytes = float(total_bytes)
+        if streams is None:
+            if prog is None or total_bytes is None:
+                raise EventSimError(
+                    "need either (prog, total_bytes) or streams=")
+            streams = (Stream("main", prog, float(total_bytes),
+                              rank_data=rank_data),)
+        else:
+            if prog is not None or total_bytes is not None \
+                    or rank_data is not None:
+                raise EventSimError(
+                    "pass either (prog, total_bytes[, rank_data]) or "
+                    "streams=, not both")
+            streams = tuple(streams)
+            if not streams:
+                raise EventSimError("streams= must hold at least one stream")
+        names = [s.name for s in streams]
+        if len(set(names)) != len(names):
+            raise EventSimError(f"stream names must be unique: {names}")
+        n = streams[0].program.n
+        for s in streams:
+            s.program.validate()
+            if s.program.n != n:
+                raise EventSimError(
+                    f"stream {s.name!r} has {s.program.n} ranks but stream "
+                    f"{streams[0].name!r} has {n}: all streams share one "
+                    f"cluster")
+            if not s.priority > 0.0:
+                raise EventSimError(
+                    f"stream {s.name!r} priority must be > 0, got "
+                    f"{s.priority!r}")
+            if s.start_time < 0.0:
+                raise EventSimError(
+                    f"stream {s.name!r} start_time must be >= 0, got "
+                    f"{s.start_time!r}")
+        self.n = n
+        self.prog = streams[0].program    # primary stream's initial program
+        #: summed payload across streams (a single-program run's total)
+        self.total_bytes = float(sum(s.payload_bytes for s in streams))
         self.alpha = alpha
         self.repair_latency = repair_latency
         # duck-typed recovery control plane: on_failure(sim, now, failure) ->
         # RecoveryDecision | None, on_recover(sim, now, failure) -> None
         self.controller = controller
         if cluster is not None:
-            if cluster.num_nodes != prog.n:
+            if cluster.num_nodes != n:
                 raise EventSimError(
-                    f"program has {prog.n} ranks but cluster has "
+                    f"programs have {n} ranks but cluster has "
                     f"{cluster.num_nodes} nodes")
             self.caps = _Capacities.from_cluster(cluster)
         elif capacities is not None:
-            if len(capacities) != prog.n:
+            if len(capacities) != n:
                 raise EventSimError("capacities must have one entry per rank")
             self.caps = _Capacities.uniform(capacities, g)
         else:
             raise EventSimError("need either cluster= or capacities=")
-        self.healthy_caps = [self.caps.capacity(r) for r in range(prog.n)]
+        self.healthy_caps = [self.caps.capacity(r) for r in range(n)]
 
         self.transfers: list[_Transfer] = []
         self._segstate: list[_SegState] = []
         self.segment_finish: list[float] = []
-        #: absolute index of the active program's first segment in the
-        #: cumulative per-segment lists (advances at every replan)
-        self._active_seg_base = 0
-        self._instantiate(prog, self.total_bytes)
+        #: per-segment payload buffers, parallel to ``_segstate`` (None for
+        #: segments of streams without rank_data)
+        self._data: list[_SegData | None] = []
+        self._streams: list[_StreamState] = []
+        self._stream_index: dict[str, int] = {}
+        for spec in streams:
+            st = _StreamState(index=len(self._streams), spec=spec,
+                              prog=spec.program)
+            self._streams.append(st)
+            self._stream_index[spec.name] = st.index
+            new = self._instantiate(spec.program, spec.payload_bytes, st)
+            st.remaining = st.transfers = len(new)
+            self._init_stream_data(st, spec.rank_data)
+        assert len(self._data) == len(self._segstate)
         self._remaining = len(self.transfers)
         self._max_iters = 50 * len(self.transfers) + 10_000
-        self._init_data(rank_data)
 
         # event queue: (time, seq, kind, arg)
         self._events: list[tuple[float, int, str, object]] = []
@@ -463,8 +630,8 @@ class EventSimulator:
 
         self._active: set[int] = set()
         self.link_bytes: dict[tuple[int, int], float] = {}
-        self.rank_tx: dict[int, float] = {r: 0.0 for r in range(prog.n)}
-        self.rank_rx: dict[int, float] = {r: 0.0 for r in range(prog.n)}
+        self.rank_tx: dict[int, float] = {r: 0.0 for r in range(self.n)}
+        self.rank_rx: dict[int, float] = {r: 0.0 for r in range(self.n)}
         self.retransmitted_bytes = 0.0
         self.failovers = 0
         self.replans = 0
@@ -475,10 +642,10 @@ class EventSimulator:
 
     # -- construction --------------------------------------------------------
     def _check_target(self, f: Failure) -> None:
-        if not 0 <= f.node < self.prog.n:
+        if not 0 <= f.node < self.n:
             raise EventSimError(
-                f"failure targets node {f.node} but the program has "
-                f"ranks 0..{self.prog.n - 1}: {f}")
+                f"failure targets node {f.node} but the programs have "
+                f"ranks 0..{self.n - 1}: {f}")
         if not 0 <= f.rail < self.caps.num_rails(f.node):
             raise EventSimError(
                 f"failure targets rail {f.rail} but node {f.node} has "
@@ -488,17 +655,19 @@ class EventSimulator:
         heapq.heappush(self._events, (t, self._seq, kind, arg))
         self._seq += 1
 
-    def _instantiate(self, prog: CollectiveProgram, total_bytes: float) -> list[_Transfer]:
+    def _instantiate(self, prog: CollectiveProgram, total_bytes: float,
+                     stream: _StreamState) -> list[_Transfer]:
         """Build + dependency-wire ``prog``'s transfers over ``total_bytes``.
 
         Appends to ``self.transfers`` (tids continue after existing ones),
         registers one :class:`_SegState` per segment (segment indices are
-        *absolute* across program swaps — ``segment_finish`` and the chunk
-        map grow, never reset), and returns the new transfers.  Dependency
-        rule: transfer (seg, step i, {s,d}) waits on all transfers of s's
-        and d's previous participating step in the same segment.  Used at
-        init and when the control plane swaps in a replanned program
-        mid-collective.
+        *absolute* across streams and program swaps — ``segment_finish``
+        and the chunk map grow, never reset; ``stream.seg_ids`` records
+        which belong to ``stream``), and returns the new transfers.
+        Dependency rule: transfer (seg, step i, {s,d}) waits on all
+        transfers of s's and d's previous participating step in the same
+        segment.  Used at init and when the control plane swaps in a
+        replanned program mid-collective.
         """
         base = len(self.transfers)
         seg_base = len(self._segstate)
@@ -524,12 +693,15 @@ class EventSimulator:
                         whole_buffer=st.whole_buffer,
                         send_chunk=st.send_chunk[src],
                         recv_chunk=st.recv_chunk[dst],
+                        stream=stream.index,
+                        weight=stream.spec.priority,
                     ))
             needed = (tuple(sched.result_ranks) if sched.result_ranks
                       else tuple(sorted(participants)))
             self._segstate.append(_SegState(
                 schedule=sched, seg_bytes=seg_bytes, needed=needed,
-                writers_left=writers))
+                writers_left=writers, stream=stream.index))
+            stream.seg_ids.append(seg_base + si)
             self.segment_finish.append(0.0)
         new = self.transfers[base:]
         by_seg_step_rank: dict[tuple[int, int, int], list[_Transfer]] = {}
@@ -556,29 +728,34 @@ class EventSimulator:
                     self.transfers[p].dependents.append(t.tid)
         return new
 
-    def _init_data(self, rank_data: Sequence[np.ndarray] | None) -> None:
-        """Per-rank, per-segment chunked float64 buffers (as executor_np)."""
-        self._data: list[_SegData] | None = None
+    def _init_stream_data(
+        self, stream: _StreamState,
+        rank_data: Sequence[np.ndarray] | None,
+    ) -> None:
+        """Per-rank, per-segment chunked float64 buffers (as executor_np)
+        for one stream; a stream without data registers None per segment so
+        absolute segment indices keep addressing ``_data``."""
         if rank_data is None:
+            self._data.extend([None] * len(stream.prog.segments))
             return
-        n = self.prog.n
+        n = self.n
         assert len(rank_data) == n
         data = [np.asarray(d, dtype=np.float64) for d in rank_data]
         total = data[0].shape[-1]
-        self._orig_total = total
+        stream.has_data = True
+        stream.orig_total = total
         #: pristine per-rank contributions — what a chunk rolls back to when
         #: a replan finds it durably complete at no rank
-        self._pristine = [d.copy() for d in data]
+        stream.pristine = [d.copy() for d in data]
         # segment boundaries mirror executor_np.execute_program
         bounds = []
         start = 0
-        for i, seg in enumerate(self.prog.segments):
-            end = total if i == len(self.prog.segments) - 1 else \
+        for i, seg in enumerate(stream.prog.segments):
+            end = total if i == len(stream.prog.segments) - 1 else \
                 start + int(round(seg.frac * total))
             bounds.append((start, end))
             start = end
-        self._data = []
-        for si, seg in enumerate(self.prog.segments):
+        for si, seg in enumerate(stream.prog.segments):
             s, e = bounds[si]
             self._append_seg_data(
                 [data[r][s:e] for r in range(n)],
@@ -595,7 +772,6 @@ class EventSimulator:
         executor_np pads).  Must be called once per segment, in the same
         order ``_instantiate`` registers segments, so absolute segment
         indices address both ``_segstate`` and ``_data``."""
-        assert self._data is not None
         orig = len(dest)
         pad = (-orig) % num_chunks
         bufs = []
@@ -623,15 +799,17 @@ class EventSimulator:
 
     # -- data plane ----------------------------------------------------------
     def _snapshot(self, t: _Transfer) -> None:
-        if self._data is None:
+        sd = self._data[t.seg]
+        if sd is None:
             return
-        src_buf = self._data[t.seg].bufs[t.src]
+        src_buf = sd.bufs[t.src]
         t.payload = src_buf.copy() if t.whole_buffer else src_buf[t.send_chunk].copy()
 
     def _deliver(self, t: _Transfer) -> None:
-        if self._data is None or t.payload is None:
+        sd = self._data[t.seg]
+        if sd is None or t.payload is None:
             return
-        bufs = self._data[t.seg].bufs
+        bufs = sd.bufs
         if t.whole_buffer:
             bufs[t.dst] = bufs[t.dst] + t.payload if t.accumulate \
                 else t.payload.copy()
@@ -643,16 +821,17 @@ class EventSimulator:
                 bufs[t.dst][c] = t.payload
         t.payload = None
 
-    def _final_data(self) -> list[np.ndarray] | None:
-        if self._data is None:
+    def _final_data(self, stream: _StreamState) -> list[np.ndarray] | None:
+        if not stream.has_data:
             return None
-        n = self.prog.n
-        out = [np.empty(self._orig_total, np.float64) for _ in range(n)]
+        n = self.n
+        out = [np.empty(stream.orig_total, np.float64) for _ in range(n)]
         # Creation order: the initial program's segments cover every position
         # at every rank; each residual program's segments then overwrite
         # exactly the positions (and ranks) they re-covered.  Settled chunks
         # keep their retired segment's values — that is the conservation.
-        for sd in self._data:
+        for seg_id in stream.seg_ids:
+            sd = self._data[seg_id]
             ranks = range(n) if sd.write_ranks is None else sd.write_ranks
             for r in ranks:
                 out[r][sd.dest] = sd.bufs[r].reshape(-1)[:len(sd.dest)]
@@ -679,6 +858,10 @@ class EventSimulator:
         self.rank_tx[t.src] += t.size
         self.rank_rx[t.dst] += t.size
         self.segment_finish[t.seg] = max(self.segment_finish[t.seg], now)
+        st = self._streams[t.stream]
+        st.moved_bytes += t.size
+        st.remaining -= 1
+        st.finish_time = max(st.finish_time, now)
         # chunk map: one write owed to the destination chunk(s) has landed
         writers = self._segstate[t.seg].writers_left
         if t.whole_buffer:
@@ -702,6 +885,10 @@ class EventSimulator:
         e = (t.src, t.dst)
         self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
         self.failovers += 1
+        st = self._streams[t.stream]
+        st.retransmitted_bytes += sent
+        st.moved_bytes += sent
+        st.failovers += 1
         t.payload = None
         t.state = _LATENT
         self._active.discard(t.tid)
@@ -755,7 +942,9 @@ class EventSimulator:
                 derived=decision is not None,
             ))
         if decision is not None and decision.replan is not None:
-            self._push(now + decision.replan_delay, "replan", decision.replan)
+            target = self._resolve_stream(decision.replan_stream)
+            self._push(now + decision.replan_delay, "replan",
+                       (decision.replan, target))
 
     def _confirm_recovery(self, now: float, f: Failure) -> None:
         """The re-probe confirming ``f``'s recovery: restore the capacity
@@ -773,8 +962,20 @@ class EventSimulator:
             confirmed(self, now, f)
 
     # -- chunk map / residual ------------------------------------------------
-    def _classify_residual(self):
-        """Classify the active program's chunks by durable completion.
+    def _resolve_stream(self, name: str | None) -> int:
+        """Stream index for ``name``; None = the primary (first) stream."""
+        if name is None:
+            return 0
+        try:
+            return self._stream_index[name]
+        except KeyError:
+            raise EventSimError(
+                f"unknown stream {name!r} (have "
+                f"{sorted(self._stream_index)})") from None
+
+    def _classify_residual(self, stream: _StreamState):
+        """Classify ``stream``'s active program's chunks by durable
+        completion.
 
         Returns ``(rereduce, deliver, rereduce_bytes, deliver_bytes)`` where
         ``rereduce`` is ``[(abs_seg, [chunk, ...]), ...]`` — chunks final at
@@ -790,7 +991,7 @@ class EventSimulator:
         deliver: list[tuple[int, int, tuple[int, ...], list[int]]] = []
         rereduce_bytes = 0.0
         deliver_bytes = 0.0
-        for si in range(self._active_seg_base, len(self._segstate)):
+        for si in stream.seg_ids[stream.active_seg_start:]:
             ss = self._segstate[si]
             if ss.retired or not ss.needed:
                 continue
@@ -816,44 +1017,54 @@ class EventSimulator:
                 deliver.append((si, holder, missing, chunks))
         return rereduce, deliver, rereduce_bytes, deliver_bytes
 
-    def chunk_progress(self) -> ChunkProgress:
-        """The chunk map summarized for the control plane: how much payload
-        is still genuinely missing (vs durably settled) right now."""
-        _, _, rereduce_bytes, deliver_bytes = self._classify_residual()
-        return ChunkProgress(total_bytes=self.total_bytes,
+    def chunk_progress(self, stream: str | None = None) -> ChunkProgress:
+        """The chunk map summarized for the control plane: how much of one
+        stream's payload is still genuinely missing (vs durably settled)
+        right now.  ``stream`` names the stream (None = the primary one —
+        the collective a stream-scoped control plane manages)."""
+        st = self._streams[self._resolve_stream(stream)]
+        _, _, rereduce_bytes, deliver_bytes = self._classify_residual(st)
+        return ChunkProgress(total_bytes=st.spec.payload_bytes,
                              rereduce_bytes=rereduce_bytes,
                              deliver_bytes=deliver_bytes)
 
-    def _do_replan(self, now: float, prog: CollectiveProgram) -> None:
-        """Swap in a freshly planned program, resuming from the chunk map.
+    def _do_replan(self, now: float, prog: CollectiveProgram,
+                   stream_idx: int) -> None:
+        """Swap a freshly planned program into ONE stream, resuming from
+        that stream's chunk map.
 
         Payload-conserving at chunk granularity: every unfinished transfer
-        of the superseded program is cancelled (streamed-but-unacked bytes
-        count as retransmitted), then the chunk map decides what remains —
-        settled chunks are retained verbatim, chunks final at some rank are
-        broadcast from a holder to the ranks missing them (the surviving
-        payloads ride along), and only chunks final nowhere roll back to
-        pristine contributions and re-reduce under ``prog``.  The residual
-        program is instantiated over exactly the missing chunk bytes, so
-        partial progress is never simultaneously charged as retransmitted
-        *and* re-included in the remaining payload (the old scalar
-        ``frac_done`` approximation did both).
+        of the stream's superseded program is cancelled
+        (streamed-but-unacked bytes count as retransmitted), then the chunk
+        map decides what remains — settled chunks are retained verbatim,
+        chunks final at some rank are broadcast from a holder to the ranks
+        missing them (the surviving payloads ride along), and only chunks
+        final nowhere roll back to pristine contributions and re-reduce
+        under ``prog``.  The residual program is instantiated over exactly
+        the missing chunk bytes, so partial progress is never
+        simultaneously charged as retransmitted *and* re-included in the
+        remaining payload (the old scalar ``frac_done`` approximation did
+        both).  Co-running streams are untouched: their transfers keep
+        flowing through the swap.
         """
         prog.validate()
-        if prog.n != self.active_prog.n:
+        strm = self._streams[stream_idx]
+        if prog.n != self.n:
             raise EventSimError(
-                f"replanned program has {prog.n} ranks, expected "
-                f"{self.active_prog.n}")
-        n = self.prog.n
+                f"replanned program has {prog.n} ranks, expected {self.n}")
+        n = self.n
+        active_segs = set(strm.seg_ids[strm.active_seg_start:])
         done_bytes = sum(t.size for t in self.transfers
-                         if t.state == _DONE
-                         and t.seg >= self._active_seg_base)
+                         if t.state == _DONE and t.seg in active_segs)
         cancelled = 0
         for t in self.transfers:
-            if t.state in (_BLOCKED, _LATENT, _ACTIVE):
+            if t.stream == stream_idx and t.state in (_BLOCKED, _LATENT,
+                                                      _ACTIVE):
                 if t.state == _ACTIVE:
                     sent = t.size - t.remaining
                     self.retransmitted_bytes += sent
+                    strm.retransmitted_bytes += sent
+                    strm.moved_bytes += sent
                     self.rank_tx[t.src] += sent
                     e = (t.src, t.dst)
                     self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
@@ -862,19 +1073,26 @@ class EventSimulator:
                 self._active.discard(t.tid)
                 cancelled += 1
         self.cancelled_transfers += cancelled
+        strm.cancelled += cancelled
+        strm.remaining -= cancelled
         self._remaining -= cancelled
 
         rereduce, deliver, rereduce_bytes, deliver_bytes = \
-            self._classify_residual()
+            self._classify_residual(strm)
         residual_bytes = rereduce_bytes + deliver_bytes
         self.replans += 1
-        self.replan_events.append(ReplanEvent(
+        strm.replans += 1
+        payload_bytes = strm.spec.payload_bytes
+        ev = ReplanEvent(
             at_time=now, residual_bytes=residual_bytes,
-            residual_fraction=(residual_bytes / self.total_bytes
-                               if self.total_bytes > 0 else 0.0),
+            residual_fraction=(residual_bytes / payload_bytes
+                               if payload_bytes > 0 else 0.0),
             rereduce_bytes=rereduce_bytes, deliver_bytes=deliver_bytes,
-            done_bytes=done_bytes, cancelled=cancelled))
-        for si in range(self._active_seg_base, len(self._segstate)):
+            done_bytes=done_bytes, cancelled=cancelled,
+            stream=strm.spec.name)
+        self.replan_events.append(ev)
+        strm.replan_events.append(ev)
+        for si in strm.seg_ids[strm.active_seg_start:]:
             self._segstate[si].retired = True
         if residual_bytes <= 0.0:
             # The swap arrived after the last chunk settled: nothing to
@@ -902,10 +1120,10 @@ class EventSimulator:
             f"residual[{prog.name}]", n, segments)
         residual_prog.validate()
 
-        if self._data is not None:
+        if strm.has_data:
             # Re-reduce region: pristine contributions of every chunk final
             # nowhere, partitioned across the new program's segments the
-            # same way _init_data partitions the initial payload.
+            # same way _init_stream_data partitions the initial payload.
             dest_parts = [self._chunk_dest(si, c)
                           for si, chunks in rereduce for c in chunks]
             rr_dest = (np.concatenate(dest_parts) if dest_parts
@@ -918,7 +1136,7 @@ class EventSimulator:
                         start + int(round(seg.frac * total))
                     d = rr_dest[start:end]
                     self._append_seg_data(
-                        [self._pristine[r][d] for r in range(n)],
+                        [strm.pristine[r][d] for r in range(n)],
                         d, None, seg.schedule.num_chunks)
                     start = end
             # Delivery groups: the holder's surviving final values ride the
@@ -930,12 +1148,16 @@ class EventSimulator:
                     [np.concatenate([self._chunk_values(si, c, r)
                                      for c in chunks]) for r in range(n)],
                     d, order, len(order))
-            assert len(self._data) == len(self._segstate) + \
-                len(residual_prog.segments)
+        else:
+            self._data.extend([None] * len(residual_prog.segments))
+        assert len(self._data) == len(self._segstate) + \
+            len(residual_prog.segments)
 
-        self.active_prog = residual_prog
-        self._active_seg_base = len(self._segstate)
-        new = self._instantiate(residual_prog, residual_bytes)
+        strm.prog = residual_prog
+        strm.active_seg_start = len(strm.seg_ids)
+        new = self._instantiate(residual_prog, residual_bytes, strm)
+        strm.remaining += len(new)
+        strm.transfers += len(new)
         self._remaining += len(new)
         self._max_iters += 50 * len(new) + 1_000
         for t in new:
@@ -952,12 +1174,23 @@ class EventSimulator:
                       key=lambda kv: (kv[0].at_time, kv[0].node, kv[0].rail))
 
     # -- main loop -----------------------------------------------------------
+    def _start_stream(self, now: float, stream_idx: int) -> None:
+        """Release a stream's prerequisite-free transfers into the fabric."""
+        for t in self.transfers:
+            if t.stream == stream_idx and t.deps == 0 \
+                    and t.state == _BLOCKED:
+                self._release(now, t)
+
     def run(self) -> EventSimReport:
         now = 0.0
-        # release all transfers with no prerequisites
-        for t in self.transfers:
-            if t.deps == 0:
-                self._release(now, t)
+        # release every stream starting at t=0 directly (identical event
+        # accounting to the single-program engine); later streams enter via
+        # a timed start event
+        for st in self._streams:
+            if st.spec.start_time <= 0.0:
+                self._start_stream(now, st.index)
+            else:
+                self._push(st.spec.start_time, "start", st.index)
 
         guard = 0
         while self._remaining > 0:
@@ -1022,14 +1255,35 @@ class EventSimulator:
                     self._apply_failure(now, arg, recovering=True)
                 elif kind == "confirm":
                     self._confirm_recovery(now, arg)
+                elif kind == "start":
+                    self._start_stream(now, arg)
                 elif kind == "replan":
-                    self._do_replan(now, arg)
+                    new_prog, target = arg
+                    self._do_replan(now, new_prog, target)
 
         makespan = now
         util = {}
-        for r in range(self.prog.n):
+        for r in range(self.n):
             denom = self.healthy_caps[r] * makespan
             util[r] = (self.rank_tx[r] / denom) if denom > 0 else 0.0
+        stream_reports: dict[str, StreamReport] = {}
+        for st in self._streams:
+            stream_reports[st.spec.name] = StreamReport(
+                name=st.spec.name,
+                payload_bytes=st.spec.payload_bytes,
+                priority=st.spec.priority,
+                start_time=st.spec.start_time,
+                completion_time=st.finish_time,
+                transfers=st.transfers,
+                moved_bytes=st.moved_bytes,
+                retransmitted_bytes=st.retransmitted_bytes,
+                failovers=st.failovers,
+                replans=st.replans,
+                cancelled_transfers=st.cancelled,
+                replan_events=list(st.replan_events),
+                rank_data=self._final_data(st),
+            )
+        primary = stream_reports[self._streams[0].spec.name]
         return EventSimReport(
             completion_time=makespan,
             segment_finish=list(self.segment_finish),
@@ -1041,11 +1295,12 @@ class EventSimulator:
             failovers=self.failovers,
             transfers=len(self.transfers),
             events=self.events_processed,
-            rank_data=self._final_data(),
+            rank_data=primary.rank_data,
             replans=self.replans,
             cancelled_transfers=self.cancelled_transfers,
             repair_events=list(self.repair_events),
             replan_events=list(self.replan_events),
+            streams=stream_reports,
         )
 
 
@@ -1086,6 +1341,38 @@ def simulate_program(
         alpha=alpha, failures=failures, rank_data=rank_data,
         repair_latency=repair_latency, controller=controller,
         initial_failures=initial_failures,
+    ).run()
+
+
+def simulate_streams(
+    streams: Sequence[Stream],
+    *,
+    cluster: ClusterTopology | None = None,
+    capacities: Sequence[float] | None = None,
+    g: int = 8,
+    alpha: float = DEFAULT_ALPHA,
+    failures: Sequence[Failure] = (),
+    repair_latency: float = DEFAULT_REPAIR_LATENCY,
+    controller: object | None = None,
+    initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
+) -> EventSimReport:
+    """Co-simulate a set of concurrent collective streams on one fabric.
+
+    Every stream's transfers share the per-rank tx/rx capacities under
+    weighted max-min fairness (weights = stream priorities), so
+    cross-stream contention — TP vs PP vs DP traffic on the same NICs —
+    emerges from the same fairness code path that a single program's
+    concurrent segments use.  Failures hit every stream riding the dead
+    rail; a controller's ``capacity_scale`` re-prices every stream crossing
+    the rank, and its ``replan`` swaps only ``replan_stream``'s program.
+    Per-stream accounting lands in ``report.streams``; the report's scalar
+    aggregates are the cross-stream sums.  A single-stream call is
+    behaviorally identical to :func:`simulate_program`.
+    """
+    return EventSimulator(
+        streams=streams, cluster=cluster, capacities=capacities, g=g,
+        alpha=alpha, failures=failures, repair_latency=repair_latency,
+        controller=controller, initial_failures=initial_failures,
     ).run()
 
 

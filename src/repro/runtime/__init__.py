@@ -27,12 +27,19 @@ from .control_plane import (  # noqa: F401
     RecoveryState,
     STAGES,
 )
-from .cosim import CoSimReport, run_scenario  # noqa: F401
+from .cosim import (  # noqa: F401
+    MANAGED_STREAM,
+    CoSimReport,
+    build_engine_streams,
+    run_scenario,
+)
 from .scenarios import (  # noqa: F401
     Scenario,
+    StreamSpec,
     TrainingCampaign,
     at_chunk,
     at_iteration,
+    build_stream_program,
     campaign_clean_nic_down,
     campaign_flap_storm,
     campaign_mid_replan,
@@ -42,8 +49,10 @@ from .scenarios import (  # noqa: F401
     failure_during_recovery,
     flap_storm,
     parse_campaign,
+    parse_streams,
     parse_training_campaign,
     slow_nic_degradation,
     standard_campaigns,
+    standard_parallel_streams,
     standard_training_campaigns,
 )

@@ -26,6 +26,12 @@ module makes the *iteration loop* the unit of simulation:
   path (it remains the alpha-beta mode's approximation and a conformance
   target).
 
+* Campaigns are **parallelism-aware**: ``run_campaign(streams=...)`` (or a
+  :class:`~runtime.scenarios.TrainingCampaign` carrying ``streams``)
+  co-schedules every iteration's gradient sync with TP/PP co-runner
+  streams on the shared NICs, so rebalance/replan decisions are priced
+  under cross-collective contention instead of an empty network.
+
 The campaign timeline is the back-to-back *communication* timeline: compute
 time between syncs is accounted analytically per iteration (as in
 ``iteration_time``), not simulated, so a failure's ``at_time`` is local to
@@ -47,8 +53,12 @@ from repro.core.schedule import ring_program
 from repro.core.topology import ClusterTopology, DEFAULT_ALPHA
 
 from .control_plane import ControlPlane, LedgerEntry, RecoveryLedger, RecoveryState
-from .cosim import _EngineAdapter, plan_initial_program
-from .scenarios import TrainingCampaign, at_iteration
+from .cosim import (
+    _EngineAdapter,
+    build_engine_streams,
+    plan_initial_program,
+)
+from .scenarios import StreamSpec, TrainingCampaign, at_iteration
 
 
 @dataclasses.dataclass
@@ -111,6 +121,7 @@ def run_campaign(
     g: int | None = None,
     rank_data: Sequence[np.ndarray] | None = None,
     healthy_time: float | None = None,
+    streams: Sequence[StreamSpec] | None = None,
 ) -> CampaignReport:
     """Drive a multi-iteration failure campaign through the co-simulated
     runtime with one persistent control plane.
@@ -130,12 +141,26 @@ def run_campaign(
     ``capacities`` (with ``g``) replaces the cluster's node egress with
     explicit per-rank channel capacities, matching
     ``iteration_time(mode="event")``'s channel model.
+
+    ``streams`` (default: ``campaign.streams``) makes the campaign
+    parallelism-aware: every iteration co-schedules the gradient sync with
+    one fresh TP/PP stream per :class:`StreamSpec` on the shared NICs —
+    contention, rollback, and rebalance re-pricing hit all of them, while
+    control-plane replans stay scoped to the gradient-sync stream
+    (``"dp"``).  Co-runner streams are rebuilt per iteration (activations
+    are a new payload every step) and, with ``rank_data``, each moves its
+    own copy so conservation is asserted per stream per iteration.
     """
     n = cluster.num_nodes
     g_eng = cluster.devices_per_node if g is None else g
     placement = ({"capacities": capacities, "g": g_eng}
                  if capacities is not None else {"cluster": cluster})
     cp = control_plane or ControlPlane(cluster, payload_bytes=payload_bytes)
+    # the managed stream is always placed first by build_engine_streams, so
+    # a control plane with the default stream=None targets it as the
+    # engine's primary stream — a caller-provided control plane is never
+    # mutated and stays reusable for single-stream runs
+    specs = tuple(campaign.streams if streams is None else streams)
 
     if healthy_time is None:
         healthy_time = simulate_program(
@@ -159,10 +184,19 @@ def run_campaign(
         if rank_data is not None:
             data = [np.asarray(d, dtype=np.float64).copy() for d in rank_data]
         adapter = _EngineAdapter(cp, offset=offset)
-        sim = EventSimulator(
-            prog, payload_bytes, alpha=alpha, failures=fails,
-            rank_data=data, controller=adapter, initial_failures=carry,
-            **placement)
+        if specs:
+            # parallelism-aware iteration: the gradient sync plus fresh
+            # TP/PP co-runner streams contending on the shared NICs
+            sim = EventSimulator(
+                streams=build_engine_streams(
+                    prog, payload_bytes, specs, n, rank_data=data),
+                alpha=alpha, failures=fails, controller=adapter,
+                initial_failures=carry, **placement)
+        else:
+            sim = EventSimulator(
+                prog, payload_bytes, alpha=alpha, failures=fails,
+                rank_data=data, controller=adapter, initial_failures=carry,
+                **placement)
         entries_before = len(cp.ledger.entries)
         report = sim.run()
 

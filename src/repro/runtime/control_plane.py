@@ -148,10 +148,16 @@ class ControlPlane:
         replan: bool = True,
         reprobe_base: float = REPROBE_PERIOD,
         state: FailureState | None = None,
+        stream: str | None = None,
     ):
         self.cluster = cluster
         self.payload_bytes = float(payload_bytes)
         self.collective = collective
+        #: name of the engine stream this control plane manages — the
+        #: collective whose chunk map prices replans and whose program a
+        #: replan decision swaps (co-running streams keep flowing).  None =
+        #: the engine's primary stream (the single-stream case).
+        self.stream = stream
         self.flap_replan_threshold = flap_replan_threshold
         self.flap_window = float(flap_window)
         self.replan_enabled = replan
@@ -395,6 +401,11 @@ class ControlPlane:
             balance_efficiency=eff, residual_fraction=residual_fraction,
         )
         self.ledger.record(entry)
+        # The capacity scale is installed on the *node*: every stream whose
+        # transfers cross the rebalanced NICs is re-priced by the detour
+        # efficiency, not just the stream that observed the failure — the
+        # engine's shared-capacity model applies it fabric-wide.  The replan
+        # is stream-scoped: only the managed stream's program is swapped.
         scale = {failure.node: eff} if eff < 1.0 else None
         decision = RecoveryDecision(
             repair_latency=entry.hot_repair_latency,
@@ -402,6 +413,7 @@ class ControlPlane:
             replan=prog,
             replan_delay=entry.total,
             replan_payload=replan_payload,
+            replan_stream=self.stream,
         )
         return RecoveryOutcome(entry=entry, decision=decision)
 

@@ -21,14 +21,21 @@ from repro.core.comm_sim import _strategy_program
 from repro.core.event_sim import (
     EventSimReport,
     RecoveryDecision,
+    Stream,
     simulate_program,
+    simulate_streams,
 )
 from repro.core.failures import FailureState
-from repro.core.schedule import ring_program
+from repro.core.schedule import CollectiveProgram, ring_program
 from repro.core.topology import ClusterTopology, DEFAULT_ALPHA
 
 from .control_plane import ControlPlane, RecoveryLedger, RecoveryState
-from .scenarios import Scenario
+from .scenarios import (
+    MANAGED_STREAM,
+    Scenario,
+    StreamSpec,
+    build_stream_program,
+)
 
 
 class _EngineAdapter:
@@ -53,8 +60,12 @@ class _EngineAdapter:
         self.decisions: list[RecoveryDecision] = []
 
     def on_failure(self, sim, now, failure) -> RecoveryDecision | None:
+        # chunk progress of the MANAGED stream only: replans are priced on
+        # (and swap) the control plane's collective; co-running streams'
+        # progress is theirs alone
         outcome = self.cp.handle_failure(
-            failure, self.offset + now, progress=sim.chunk_progress())
+            failure, self.offset + now,
+            progress=sim.chunk_progress(self.cp.stream))
         if outcome is None:
             return None
         self.decisions.append(outcome.decision)
@@ -89,6 +100,31 @@ def plan_initial_program(
     return _strategy_program(strategy, cluster, pre, g=g)
 
 
+def build_engine_streams(
+    prog: CollectiveProgram,
+    payload_bytes: float,
+    specs: Sequence[StreamSpec],
+    n: int,
+    *,
+    priority: float = 1.0,
+    rank_data: Sequence[np.ndarray] | None = None,
+) -> list[Stream]:
+    """The engine stream set for one co-simulated collective: the managed
+    gradient sync (``prog``, placed first and named ``"dp"`` so a
+    stream-scoped replan targets it) plus one co-running stream per
+    :class:`StreamSpec`.  When ``rank_data`` is given every stream moves
+    its own copy of the real payloads so conservation is checkable per
+    stream (the engine never mutates the caller's arrays)."""
+    streams = [Stream(MANAGED_STREAM, prog, payload_bytes,
+                      priority=priority, rank_data=rank_data)]
+    for spec in specs:
+        streams.append(Stream(
+            spec.name, build_stream_program(spec, n), spec.payload_bytes,
+            priority=spec.priority, start_time=spec.start_time,
+            rank_data=rank_data))
+    return streams
+
+
 @dataclasses.dataclass
 class CoSimReport:
     """One scenario campaign, co-simulated end to end."""
@@ -121,6 +157,8 @@ def run_scenario(
     rank_data: Sequence[np.ndarray] | None = None,
     healthy_time: float | None = None,
     finalize: bool = True,
+    streams: Sequence[StreamSpec] = (),
+    priority: float = 1.0,
 ) -> CoSimReport:
     """Drive one failure campaign through the co-simulated runtime.
 
@@ -129,6 +167,15 @@ def run_scenario(
     mid-collective and exercise the full closed loop.  ``finalize`` settles
     the state machine at campaign end (persistent degradation → REPLANNED
     for the next collective, all-healthy → HEALTHY).
+
+    ``streams`` adds co-running parallelism collectives (TP/PP traffic)
+    contending with the managed collective on the shared NICs: the engine
+    runs them all under weighted max-min fairness (the managed stream's
+    weight is ``priority``), a NIC failure rolls back and re-prices every
+    stream crossing the rail, and a control-plane replan swaps only the
+    managed stream's program.  ``healthy_time`` and ``overhead`` stay
+    relative to the managed collective alone, so the reported overhead
+    *includes* the contention cost.
     """
     n = cluster.num_nodes
     g = cluster.devices_per_node
@@ -143,9 +190,20 @@ def run_scenario(
             alpha=alpha).completion_time
 
     adapter = _EngineAdapter(cp)
-    report = simulate_program(
-        prog, payload_bytes, cluster=cluster, alpha=alpha,
-        failures=scenario.failures, rank_data=rank_data, controller=adapter)
+    if streams:
+        # the managed stream is placed first, so a control plane with the
+        # default stream=None targets it as the engine's primary stream —
+        # no need to (permanently) rebind a caller-provided control plane
+        report = simulate_streams(
+            build_engine_streams(prog, payload_bytes, streams, n,
+                                 priority=priority, rank_data=rank_data),
+            cluster=cluster, alpha=alpha, failures=scenario.failures,
+            controller=adapter)
+    else:
+        report = simulate_program(
+            prog, payload_bytes, cluster=cluster, alpha=alpha,
+            failures=scenario.failures, rank_data=rank_data,
+            controller=adapter)
     if finalize:
         cp.finalize(report.completion_time)
 

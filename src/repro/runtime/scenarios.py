@@ -22,11 +22,21 @@ granularity via :func:`at_chunk`, and the campaign runner in
 one persistent control plane.  The text spec grows an ``iter=`` field::
 
     nic_down node=1 rail=0 iter=3 at=0.4; flap node=2 rail=1 iter=5 at=0.2 down=0.05
+
+Real training parallelism runs TP/PP/DP collectives *concurrently* over
+the same NICs, so campaigns carry a **streams** dimension: a
+:class:`StreamSpec` names one co-running collective stream (kind, payload,
+priority, start offset) next to the control-plane-managed gradient sync.
+:func:`standard_parallel_streams` builds the default TP-allreduce +
+PP-handoff pair, :func:`parse_streams` accepts a compact textual form::
+
+    tp kind=allreduce frac=0.5 prio=1; pp kind=p2p frac=0.125 start=0.1
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Sequence
 
 from repro.core.failures import (
     Failure,
@@ -34,6 +44,12 @@ from repro.core.failures import (
     link_flap,
     nic_down_at,
     slow_nic,
+)
+from repro.core.schedule import (
+    CollectiveProgram,
+    Segment,
+    build_ring_broadcast,
+    ring_program,
 )
 
 
@@ -51,6 +67,125 @@ class Scenario:
             tuple(sorted(self.failures, key=lambda f: f.at_time)))
 
 
+#: name the runtime gives the control-plane-managed gradient-sync stream
+#: in a multi-stream co-simulation; reserved — co-runner specs may not
+#: claim it
+MANAGED_STREAM = "dp"
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamSpec:
+    """One co-running collective stream of a training iteration.
+
+    ``kind`` selects the collective shape: ``"allreduce"`` (a ring
+    AllReduce over all ranks — the TP activation sync or a second DP
+    group) or ``"p2p"`` (a pipelined chain handoff from ``root`` — the PP
+    activation send/recv, modeled as the chain broadcast whose result is
+    the root's buffer at every rank).  ``payload_bytes`` is the stream's
+    timing payload, ``priority`` its weight in the engine's weighted
+    max-min fair bandwidth share, ``start_time`` its release offset into
+    the iteration.  The control-plane-managed gradient sync is NOT a spec:
+    the runtime builds it from its planned (or carried replanned) program
+    and places it first — specs describe only the co-runners contending
+    with it.
+    """
+
+    name: str
+    kind: str
+    payload_bytes: float
+    priority: float = 1.0
+    start_time: float = 0.0
+    root: int = 0
+
+    def __post_init__(self) -> None:
+        if self.name == MANAGED_STREAM:
+            raise ValueError(
+                f"stream name {MANAGED_STREAM!r} is reserved for the "
+                f"control-plane-managed gradient sync; co-runner specs "
+                f"must use another name")
+        if self.kind not in ("allreduce", "p2p"):
+            raise ValueError(
+                f"unknown stream kind {self.kind!r} "
+                f"(expected 'allreduce' or 'p2p')")
+        if self.payload_bytes <= 0:
+            raise ValueError(
+                f"stream {self.name!r} payload must be > 0, got "
+                f"{self.payload_bytes!r}")
+        if self.priority <= 0:
+            raise ValueError(
+                f"stream {self.name!r} priority must be > 0, got "
+                f"{self.priority!r}")
+        if self.start_time < 0:
+            raise ValueError(
+                f"stream {self.name!r} start_time must be >= 0, got "
+                f"{self.start_time!r}")
+
+
+def build_stream_program(spec: StreamSpec, n: int) -> CollectiveProgram:
+    """The :class:`CollectiveProgram` a co-running stream executes on an
+    ``n``-rank cluster (ranks are nodes, as everywhere in the event
+    engine)."""
+    order = list(range(n))
+    if spec.kind == "allreduce":
+        return ring_program(order, n)
+    root = spec.root % n
+    return CollectiveProgram(
+        f"pp_chain[{n}]", n,
+        [Segment(1.0, build_ring_broadcast(order, n, root=root))])
+
+
+def standard_parallel_streams(
+    payload_bytes: float,
+    *,
+    tp_frac: float = 0.5,
+    pp_frac: float = 0.125,
+    tp_priority: float = 1.0,
+    pp_priority: float = 1.0,
+) -> tuple[StreamSpec, ...]:
+    """The default TP+PP co-runner pair next to a DP gradient sync of
+    ``payload_bytes``: a TP activation AllReduce at ``tp_frac`` of the DP
+    payload and a PP activation chain handoff at ``pp_frac`` — the 3-stream
+    (TP+PP+DP) shape the paper's training figures run under."""
+    return (
+        StreamSpec("tp", "allreduce", tp_frac * payload_bytes,
+                   priority=tp_priority),
+        StreamSpec("pp", "p2p", pp_frac * payload_bytes,
+                   priority=pp_priority),
+    )
+
+
+def parse_streams(
+    spec: str, *, payload_scale: float = 1.0, t_scale: float = 1.0,
+) -> tuple[StreamSpec, ...]:
+    """Parse the textual streams dimension: ';'-separated
+    ``name k=v k=v ...`` entries.  Fields: ``kind`` (allreduce|p2p, default
+    allreduce), ``frac`` (payload as a fraction of ``payload_scale``,
+    default 1.0), ``prio``, ``start`` (multiplied by ``t_scale``),
+    ``root``::
+
+        parse_streams("tp kind=allreduce frac=0.5; "
+                      "pp kind=p2p frac=0.125 start=0.1",
+                      payload_scale=dp_payload, t_scale=t_h)
+    """
+    out: list[StreamSpec] = []
+    for name, kv, raw in _split_entries(spec, "stream"):
+        out.append(StreamSpec(
+            name,
+            kv.pop("kind", "allreduce"),
+            float(kv.pop("frac", 1.0)) * payload_scale,
+            priority=float(kv.pop("prio", 1.0)),
+            start_time=float(kv.pop("start", 0.0)) * t_scale,
+            root=int(kv.pop("root", 0)),
+        ))
+        if kv:
+            raise ValueError(
+                f"unexpected fields {sorted(kv)} in stream {raw!r}")
+    names = [s.name for s in out]
+    if len(set(names)) != len(names):
+        raise ValueError(f"stream names must be unique: {names}")
+    return tuple(out)
+
+
 @dataclasses.dataclass(frozen=True)
 class TrainingCampaign:
     """A multi-iteration failure campaign: N gradient syncs back-to-back.
@@ -60,12 +195,15 @@ class TrainingCampaign:
     expressed as a fraction of the healthy collective time ``t_h``).  The
     campaign runner (:func:`runtime.campaign.run_campaign`) drives one
     persistent control plane across all iterations, so flap counts,
-    capacity factors, and replanned programs carry over."""
+    capacity factors, and replanned programs carry over.  ``streams`` are
+    the co-running parallelism collectives (TP/PP traffic) contending with
+    every iteration's gradient sync on the shared NICs."""
 
     name: str
     iterations: int
     events: tuple[tuple[int, Failure], ...]
     note: str = ""
+    streams: tuple[StreamSpec, ...] = ()
 
     def __post_init__(self) -> None:
         if self.iterations < 1:
@@ -78,6 +216,10 @@ class TrainingCampaign:
         object.__setattr__(
             self, "events",
             tuple(sorted(self.events, key=lambda kf: (kf[0], kf[1].at_time))))
+        object.__setattr__(self, "streams", tuple(self.streams))
+        names = [s.name for s in self.streams]
+        if len(set(names)) != len(names):
+            raise ValueError(f"stream names must be unique: {names}")
 
     def failures_for(self, iteration: int) -> tuple[Failure, ...]:
         """The failures striking during ``iteration``, in injection order."""
@@ -276,6 +418,24 @@ def standard_training_campaigns(
 _EVENT_KINDS = ("nic_down", "flap", "flaps", "slow")
 
 
+def _split_entries(spec: str, noun: str):
+    """Shared text-DSL tokenizer: ';'-separated ``head k=v k=v ...``
+    entries.  Yields ``(head, kv, raw)`` with *string* values — callers
+    convert per field (events are all-float, streams mix kinds)."""
+    for raw in spec.split(";"):
+        raw = raw.strip()
+        if not raw:
+            continue
+        parts = raw.split()
+        head, kv = parts[0], {}
+        for tok in parts[1:]:
+            if "=" not in tok:
+                raise ValueError(f"malformed field {tok!r} in {noun} {raw!r}")
+            k, v = tok.split("=", 1)
+            kv[k] = v
+        yield head, kv, raw
+
+
 def _parse_events(
     spec: str, t_scale: float, *, allow_iter: bool,
 ) -> list[tuple[int, Failure]]:
@@ -283,20 +443,11 @@ def _parse_events(
     (iteration, failure) pairs; ``iter=`` is only legal when ``allow_iter``
     (the single-collective :func:`parse_campaign` has no iterations)."""
     events: list[tuple[int, Failure]] = []
-    for raw in spec.split(";"):
-        raw = raw.strip()
-        if not raw:
-            continue
-        parts = raw.split()
-        kind, kv = parts[0], {}
+    for kind, raw_kv, raw in _split_entries(spec, "event"):
         if kind not in _EVENT_KINDS:
             raise ValueError(
                 f"unknown event kind {kind!r} (expected one of {_EVENT_KINDS})")
-        for tok in parts[1:]:
-            if "=" not in tok:
-                raise ValueError(f"malformed field {tok!r} in event {raw!r}")
-            k, v = tok.split("=", 1)
-            kv[k] = float(v)
+        kv = {k: float(v) for k, v in raw_kv.items()}
         node, rail = int(kv.pop("node")), int(kv.pop("rail"))
         if "iter" in kv and not allow_iter:
             raise ValueError(
@@ -338,14 +489,25 @@ def parse_campaign(name: str, spec: str, *, t_scale: float = 1.0) -> Scenario:
 
 def parse_training_campaign(
     name: str, spec: str, *, iterations: int, t_scale: float = 1.0,
+    streams: "str | Sequence[StreamSpec]" = (),
+    stream_payload_scale: float = 1.0,
 ) -> TrainingCampaign:
     """Parse the same grammar into a :class:`TrainingCampaign`; each event
     takes an optional ``iter=k`` (default 0) placing it at gradient sync
-    ``k``, with ``at`` still iteration-local::
+    ``k``, with ``at`` still iteration-local.  ``streams`` adds the
+    concurrent-parallelism dimension — either ready-made
+    :class:`StreamSpec`\\ s or a :func:`parse_streams` string (``frac``
+    scaled by ``stream_payload_scale``, ``start`` by ``t_scale``)::
 
         parse_training_campaign(
             "mid", "nic_down node=1 rail=0 iter=4 at=0.4",
-            iterations=8, t_scale=t_h)
+            iterations=8, t_scale=t_h,
+            streams="tp kind=allreduce frac=0.5; pp kind=p2p frac=0.125",
+            stream_payload_scale=dp_payload)
     """
     events = _parse_events(spec, t_scale, allow_iter=True)
-    return TrainingCampaign(name, iterations, tuple(events), note=spec)
+    if isinstance(streams, str):
+        streams = parse_streams(streams, payload_scale=stream_payload_scale,
+                                t_scale=t_scale)
+    return TrainingCampaign(name, iterations, tuple(events), note=spec,
+                            streams=tuple(streams))

@@ -89,3 +89,13 @@ def test_runtime_bench_tiny_campaign_sweep():
     assert rows["mid_replan_retrans_bytes"] >= 0.0
     assert 0.0 < rows["mid_replan_residual_fraction"] <= 1.0
     assert rows["mid_replan_payload_max_error"] < 1e-9
+    # contention rows: the multi-stream (TP+PP+DP) path runs in the tiny
+    # tier too — fair sharing slows the contended DP sync (never speeds
+    # it), every stream's payload is exact, a NIC-down costs at least as
+    # much with co-running streams, and priority weighting buys the DP
+    # sync real bandwidth back
+    assert rows["multi_stream_healthy_dp_slowdown"] >= 1.0
+    assert rows["multi_stream_payload_max_error"] < 1e-9
+    assert rows["nic_down_contention_ratio"] >= 1.0 - 1e-9
+    assert rows["nic_down_contended_dp_time"] > 0.0
+    assert rows["stream_priority_dp_speedup"] > 1.0

@@ -37,6 +37,7 @@ from repro.runtime import (
     campaign_mid_replan,
     parse_training_campaign,
     run_campaign,
+    standard_parallel_streams,
     training_campaign_report,
 )
 
@@ -272,6 +273,82 @@ def test_flap_recovery_keeps_physical_time_across_boundary_replan(cluster, t_h):
                 if e.kind == "reprobe"]
     assert reprobes
     assert reprobes[-1].time == pytest.approx(flap_global, rel=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: concurrent TP/PP/DP streams through the campaign runner
+# ---------------------------------------------------------------------------
+
+def test_parallel_campaign_three_streams_mid_iteration_nic_down(cluster, t_h):
+    """The multi-stream acceptance path: a TP+PP+DP campaign with a
+    mid-iteration NIC-down runs end to end through one persistent
+    ControlPlane — every iteration co-schedules all three streams, all
+    three streams' payloads stay exact on both sides of the failure, the
+    ledger's rebalance entry carries the cross-stream re-pricing factor
+    (installed on the node, so TP/PP paid it too), and the replanned
+    program carries into later iterations scoped to the DP stream."""
+    specs = standard_parallel_streams(PAYLOAD)
+    data = _data(4)
+    want = np.sum(np.stack(data), axis=0)
+    rep = run_campaign(
+        campaign_clean_nic_down(t_h, iterations=4, fail_iteration=1),
+        cluster, PAYLOAD, healthy_time=t_h, rank_data=data, streams=specs)
+
+    for it in rep.iterations:
+        assert set(it.report.streams) == {"dp", "tp", "pp"}
+        for r in it.report.streams["dp"].rank_data:
+            np.testing.assert_allclose(r, want, atol=1e-9)
+        for r in it.report.streams["tp"].rank_data:
+            np.testing.assert_allclose(r, want, atol=1e-9)
+        for r in it.report.streams["pp"].rank_data:   # chain: root's buffer
+            np.testing.assert_allclose(r, data[0], atol=1e-12)
+        # report scalars are exactly the per-stream sums (bench rows built
+        # on them stay stable as streams are added)
+        assert it.report.retransmitted_bytes == pytest.approx(
+            sum(sr.retransmitted_bytes
+                for sr in it.report.streams.values()))
+        assert it.report.failovers == sum(
+            sr.failovers for sr in it.report.streams.values())
+
+    # the NIC-down rolled back in-flight transfers of the co-runners too
+    mid = rep.iterations[1]
+    assert mid.report.failovers >= 1
+    # rebalance entry: the detour-efficiency re-pricing every stream pays
+    hard = next(e for e in rep.ledger.entries if e.failure is not None)
+    assert "rebalance" in hard.stages
+    assert hard.balance_efficiency < 1.0
+    # the boundary re-selection carries the DP program into iteration 2;
+    # co-runners are rebuilt fresh, unreplanned
+    assert rep.iterations[2].program_source == "replanned"
+    assert all(it.report.streams["tp"].replans == 0
+               and it.report.streams["pp"].replans == 0
+               for it in rep.iterations)
+    assert rep.final_state is RecoveryState.REPLANNED
+    # degraded iterations run slower than the pre-failure contended one
+    assert rep.iterations[2].completion_time > \
+        rep.iterations[0].completion_time
+
+
+def test_campaign_streams_dimension_on_the_dsl(cluster, t_h):
+    """TrainingCampaign carries its streams= dimension: a campaign built
+    with streams runs them without run_campaign needing the argument, and
+    the parser threads the textual form through."""
+    tc = parse_training_campaign(
+        "contended", "nic_down node=1 rail=0 iter=1 at=0.4",
+        iterations=3, t_scale=t_h,
+        streams="tp kind=allreduce frac=0.5; pp kind=p2p frac=0.125",
+        stream_payload_scale=PAYLOAD)
+    assert [s.name for s in tc.streams] == ["tp", "pp"]
+    assert tc.streams[0].payload_bytes == pytest.approx(0.5 * PAYLOAD)
+    rep = run_campaign(tc, cluster, PAYLOAD, healthy_time=t_h)
+    assert all(set(it.report.streams) == {"dp", "tp", "pp"}
+               for it in rep.iterations)
+    # contention is real: the first (healthy) iteration is slower than the
+    # stream-free healthy collective
+    assert rep.iterations[0].completion_time > t_h
+    with pytest.raises(ValueError):       # duplicate stream names rejected
+        TrainingCampaign("dup", 2, (), streams=(
+            tc.streams[0], tc.streams[0]))
 
 
 # ---------------------------------------------------------------------------

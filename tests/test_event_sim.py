@@ -13,9 +13,11 @@ from repro.core.comm_sim import event_failure_scenario
 from repro.core.event_sim import (
     EventSimError,
     StalledError,
+    Stream,
     predict_ring_all_reduce,
     simulate_program,
     simulate_schedule,
+    simulate_streams,
 )
 from repro.core.executor_np import all_reduce_oracle
 from repro.core.failures import (
@@ -326,6 +328,171 @@ def test_r2ccl_program_conserves_under_failure(n, deg, x, seed, fail_frac):
     want = all_reduce_oracle(data)
     for d in rep.rank_data:
         np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# concurrent streams sharing NICs (multi-stream engine)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fails", [
+    [],
+    [nic_down_at(3, 0, 5e-4)],
+    [link_flap(2, 1, 3e-4, 2e-4)],
+])
+def test_single_stream_matches_single_program_engine(fails):
+    """Refactor-equivalence guard: one stream through the multi-stream
+    engine must reproduce the single-program engine EXACTLY — same
+    timings, same per-link traffic, same failover accounting, same data —
+    so nothing priced before the refactor moved."""
+    n, payload, bw = 8, 500e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    data = _data(n, 96, seed=5)
+    a = simulate_program(prog, payload, capacities=[bw] * n, g=8,
+                         rank_data=data, failures=fails)
+    b = simulate_streams(
+        [Stream("main", prog, payload, rank_data=data)],
+        capacities=[bw] * n, g=8, failures=fails)
+    assert a.completion_time == b.completion_time
+    assert a.link_bytes == b.link_bytes
+    assert a.retransmitted_bytes == b.retransmitted_bytes
+    assert a.failovers == b.failovers
+    assert a.segment_finish == b.segment_finish
+    for x, y in zip(a.rank_data, b.rank_data):
+        assert np.array_equal(x, y)
+    # the single-program report carries exactly one stream, and its
+    # breakdown IS the report's scalars
+    assert list(a.streams) == list(b.streams) == ["main"]
+    sr = b.streams["main"]
+    assert sr.retransmitted_bytes == b.retransmitted_bytes
+    assert sr.failovers == b.failovers
+    assert sr.completion_time == b.completion_time
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 6),
+    k=st.integers(2, 3),
+    size=st.integers(8, 64),
+    seed=st.integers(0, 99),
+    prios=st.lists(st.floats(0.5, 4.0), min_size=3, max_size=3),
+)
+def test_multi_stream_conservation_and_contention(n, k, size, seed, prios):
+    """Property: K concurrent AllReduce streams on a healthy ring each
+    conserve their payload exactly, no stream finishes faster than it would
+    alone (fair sharing only removes bandwidth), the joint makespan is at
+    least any solo run, and the report's scalars are the per-stream sums."""
+    bw = 50e9
+    prog = ring_program(list(range(n)), n)
+    datas = [_data(n, size, seed + i) for i in range(k)]
+    streams = [
+        Stream(f"s{i}", prog, (i + 1) * size * 8.0, priority=prios[i],
+               rank_data=datas[i])
+        for i in range(k)
+    ]
+    rep = simulate_streams(streams, capacities=[bw] * n, g=8)
+    solo = [
+        simulate_program(prog, s.payload_bytes, capacities=[bw] * n, g=8)
+        .completion_time
+        for s in streams
+    ]
+    assert rep.completion_time >= max(solo) * (1 - 1e-9)
+    for i, s in enumerate(streams):
+        sr = rep.streams[s.name]
+        want = all_reduce_oracle(datas[i])
+        for d in sr.rank_data:
+            np.testing.assert_allclose(d, want, atol=1e-9)
+        assert sr.completion_time >= solo[i] * (1 - 1e-9)
+        assert sr.retransmitted_bytes == 0.0
+    # aggregate scalars == per-stream sums, and all wire bytes accounted
+    assert rep.retransmitted_bytes == pytest.approx(
+        sum(sr.retransmitted_bytes for sr in rep.streams.values()))
+    assert rep.failovers == sum(sr.failovers for sr in rep.streams.values())
+    assert sum(rep.link_bytes.values()) == pytest.approx(
+        sum(sr.moved_bytes for sr in rep.streams.values()))
+
+
+def test_stream_priority_weights_bandwidth():
+    """Two identical streams: raising one's priority must finish it sooner
+    than in its equal-priority run and clearly ahead of the peer (weighted
+    max-min share).  The peer cannot beat its own solo time, and — sharing
+    being work-conserving — total wire traffic is unchanged."""
+    n, payload, bw = 6, 400e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    solo = predict_ring_all_reduce(n, payload, bw)
+
+    def run(p_hi):
+        return simulate_streams(
+            [Stream("hi", prog, payload, priority=p_hi),
+             Stream("lo", prog, payload)],
+            capacities=[bw] * n, g=8)
+
+    eq = run(1.0)
+    wt = run(3.0)
+    assert wt.streams["hi"].completion_time < eq.streams["hi"].completion_time
+    assert wt.streams["hi"].completion_time < wt.streams["lo"].completion_time
+    assert wt.streams["lo"].completion_time >= solo * (1 - 1e-9)
+    # the weighted run still conserves total wire traffic
+    assert sum(wt.link_bytes.values()) == pytest.approx(
+        sum(eq.link_bytes.values()))
+
+
+def test_stream_start_time_offsets_release():
+    """A stream released later cannot finish before its start; the early
+    stream's pre-overlap phase runs uncontended."""
+    n, payload, bw = 4, 200e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    t_solo = predict_ring_all_reduce(n, payload, bw)
+    late = 0.6 * t_solo
+    rep = simulate_streams(
+        [Stream("early", prog, payload),
+         Stream("late", prog, payload, start_time=late)],
+        capacities=[bw] * n, g=8)
+    assert rep.streams["late"].completion_time >= late + t_solo * (1 - 1e-9)
+    assert rep.streams["early"].completion_time < \
+        rep.streams["late"].completion_time
+
+
+def test_multi_stream_failure_rolls_back_every_stream_on_the_rail():
+    """A hard NIC death interrupts in-flight transfers of EVERY stream
+    riding the node, not just one collective's."""
+    n, payload, bw = 6, 600e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    tf = 0.4 * predict_ring_all_reduce(n, payload, bw)
+    rep = simulate_streams(
+        [Stream("a", prog, payload, rank_data=_data(n, 64, 1)),
+         Stream("b", prog, payload, rank_data=_data(n, 64, 2))],
+        capacities=[bw] * n, g=8, failures=[nic_down_at(2, 0, tf)])
+    assert rep.streams["a"].failovers >= 1
+    assert rep.streams["b"].failovers >= 1
+    assert rep.failovers == (rep.streams["a"].failovers
+                             + rep.streams["b"].failovers)
+    for name, seed in (("a", 1), ("b", 2)):
+        want = all_reduce_oracle(_data(n, 64, seed))
+        for d in rep.streams[name].rank_data:
+            np.testing.assert_allclose(d, want, atol=1e-9)
+
+
+def test_stream_validation_errors():
+    prog3 = ring_program([0, 1, 2], 3)
+    prog4 = ring_program([0, 1, 2, 3], 4)
+    with pytest.raises(EventSimError):      # duplicate names
+        simulate_streams([Stream("x", prog3, 1e6), Stream("x", prog3, 1e6)],
+                         capacities=[1e9] * 3, g=8)
+    with pytest.raises(EventSimError):      # mismatched rank counts
+        simulate_streams([Stream("a", prog3, 1e6), Stream("b", prog4, 1e6)],
+                         capacities=[1e9] * 3, g=8)
+    with pytest.raises(EventSimError):      # non-positive priority
+        simulate_streams([Stream("a", prog3, 1e6, priority=0.0)],
+                         capacities=[1e9] * 3, g=8)
+    with pytest.raises(EventSimError):      # negative start
+        simulate_streams([Stream("a", prog3, 1e6, start_time=-1.0)],
+                         capacities=[1e9] * 3, g=8)
+    with pytest.raises(EventSimError):      # no streams at all
+        simulate_streams([], capacities=[1e9] * 3, g=8)
+    from repro.core.event_sim import EventSimulator
+    with pytest.raises(EventSimError):      # both APIs at once
+        EventSimulator(prog3, 1e6, streams=[Stream("a", prog3, 1e6)],
+                       capacities=[1e9] * 3, g=8)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,7 @@ from repro.core.event_sim import (
     ChunkProgress,
     EventSimulator,
     RecoveryDecision,
+    Stream,
     predict_ring_all_reduce,
     simulate_program,
 )
@@ -188,6 +189,173 @@ def test_replan_conservation_property(n, size, seed, frac, pair):
     assert ev.residual_bytes == pytest.approx(
         ev.rereduce_bytes + ev.deliver_bytes)
     assert ev.residual_bytes <= size * 8.0 * (1 + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# replan of one stream under cross-stream contention
+# ---------------------------------------------------------------------------
+
+def _stream_identity(sim, rep):
+    """Per-stream moved == useful + retransmitted, and the per-stream wire
+    totals sum to the global link-byte total."""
+    for name, sr in rep.streams.items():
+        idx = sim._stream_index[name]
+        useful = sum(t.size for t in sim.transfers
+                     if t.state == _DONE and t.stream == idx)
+        assert sr.moved_bytes == pytest.approx(
+            useful + sr.retransmitted_bytes, rel=1e-9), name
+    assert sum(rep.link_bytes.values()) == pytest.approx(
+        sum(sr.moved_bytes for sr in rep.streams.values()), rel=1e-9)
+
+
+def _contended_replan(src, dst, n, size, frac, seed, *, controller):
+    """The managed stream (``src`` program) plus a TP-style AllReduce and a
+    PP-style chain co-runner, with ``controller`` deciding at the failure."""
+    from repro.runtime import StreamSpec, build_stream_program
+
+    prog = _program(src, n)
+    payload = size * 8.0
+    healthy = simulate_program(prog, payload,
+                               capacities=[BW] * n).completion_time
+    dp_data = _data(n, size, seed)
+    tp_data = _data(n, size, seed + 1)
+    pp_data = _data(n, size, seed + 2)
+    streams = [
+        Stream("dp", prog, payload, rank_data=[d.copy() for d in dp_data]),
+        Stream("tp", _program("ring", n), 0.5 * payload,
+               rank_data=[d.copy() for d in tp_data]),
+        Stream("pp", build_stream_program(StreamSpec("pp", "p2p", 1.0), n),
+               0.25 * payload, rank_data=[d.copy() for d in pp_data]),
+    ]
+    sim = EventSimulator(
+        streams=streams, capacities=[BW] * n,
+        failures=[slow_nic(0, 0, frac * healthy, lost_fraction=0.3)],
+        controller=controller)
+    rep = sim.run()
+    return sim, rep, dp_data, tp_data, pp_data
+
+
+def test_mid_replan_under_contention_conserves_all_streams():
+    """Satellite: replanning ONE stream mid-collective while TP/PP streams
+    share the NICs conserves the replanned stream's payload exactly AND
+    leaves the co-running streams' results bit-identical to a run without
+    the swap — the swap is invisible to traffic it does not own."""
+    n, size, frac, seed = 6, 150, 0.45, 11
+    sim, rep, dp, tp, pp = _contended_replan(
+        "ring", "tree", n, size, frac, seed,
+        controller=_ForceReplan(tree_program(list(range(n)), n)))
+    assert rep.replans == 1
+    assert rep.streams["dp"].replans == 1
+    assert rep.streams["tp"].replans == 0
+    assert rep.streams["pp"].replans == 0
+    assert rep.replan_events[0].stream == "dp"
+    for d in rep.streams["dp"].rank_data:
+        np.testing.assert_allclose(d, all_reduce_oracle(dp), atol=1e-9)
+    for d in rep.streams["tp"].rank_data:
+        np.testing.assert_allclose(d, all_reduce_oracle(tp), atol=1e-9)
+    for d in rep.streams["pp"].rank_data:     # chain handoff: root's buffer
+        np.testing.assert_allclose(d, pp[0], atol=1e-12)
+    _stream_identity(sim, rep)
+
+    # co-runner bit-exactness: same streams, same failure, no swap
+    class Noop:
+        def on_failure(self, sim, now, failure):
+            return None
+
+        def on_recover(self, sim, now, failure):
+            return None
+
+    _, base, _, _, _ = _contended_replan(
+        "ring", "tree", n, size, frac, seed, controller=Noop())
+    assert base.replans == 0
+    for name in ("tp", "pp"):
+        for x, y in zip(rep.streams[name].rank_data,
+                        base.streams[name].rank_data):
+            assert np.array_equal(x, y), name
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(3, 7),
+    size=st.integers(8, 120),
+    seed=st.integers(0, 99),
+    frac=st.floats(0.05, 0.95),
+    pair=st.sampled_from([("ring", "tree"), ("tree", "ring"),
+                          ("ring", "ring"), ("ring", "r2ccl")]),
+)
+def test_replan_conservation_under_contention_property(n, size, seed, frac,
+                                                       pair):
+    """Property: across algorithm pairs and failure times, a mid-collective
+    swap of the managed stream under TP/PP contention conserves every
+    stream's payload, the per-stream ``moved == useful + retransmitted``
+    identity holds, and the swap stays scoped to the managed stream."""
+    src, dst = pair
+    sim, rep, dp, tp, pp = _contended_replan(
+        src, dst, n, size, frac, seed,
+        controller=_ForceReplan(_program(dst, n)))
+    assert rep.replans == 1
+    assert sum(sr.replans for sr in rep.streams.values()) == 1
+    assert rep.streams["dp"].replans == 1
+    for d in rep.streams["dp"].rank_data:
+        np.testing.assert_allclose(d, all_reduce_oracle(dp), atol=1e-9)
+    for d in rep.streams["tp"].rank_data:
+        np.testing.assert_allclose(d, all_reduce_oracle(tp), atol=1e-9)
+    for d in rep.streams["pp"].rank_data:
+        np.testing.assert_allclose(d, pp[0], atol=1e-12)
+    _stream_identity(sim, rep)
+    ev = rep.replan_events[0]
+    assert ev.stream == "dp"
+    assert ev.residual_bytes == pytest.approx(
+        ev.rereduce_bytes + ev.deliver_bytes)
+    assert ev.residual_bytes <= size * 8.0 * (1 + 1e-9)
+
+
+def test_replan_targets_named_stream():
+    """RecoveryDecision.replan_stream routes the swap: naming a non-primary
+    stream swaps THAT stream's program, and an unknown name is an error."""
+    from repro.core.event_sim import EventSimError
+
+    n, size = 5, 100
+    payload = size * 8.0
+    prog = ring_program(list(range(n)), n)
+    healthy = simulate_program(prog, payload,
+                               capacities=[BW] * n).completion_time
+
+    class Target:
+        def __init__(self, name):
+            self.name = name
+            self.fired = False
+
+        def on_failure(self, sim, now, failure):
+            if self.fired:
+                return None
+            self.fired = True
+            return RecoveryDecision(
+                repair_latency=1e-5, replan=tree_program(list(range(n)), n),
+                replan_stream=self.name)
+
+        def on_recover(self, sim, now, failure):
+            return None
+
+    def run(name):
+        data = {"a": _data(n, size, 1), "b": _data(n, size, 2)}
+        rep = EventSimulator(
+            streams=[Stream("a", prog, payload, rank_data=data["a"]),
+                     Stream("b", prog, payload, rank_data=data["b"])],
+            capacities=[BW] * n,
+            failures=[slow_nic(0, 0, 0.4 * healthy, lost_fraction=0.3)],
+            controller=Target(name)).run()
+        return rep, data
+
+    rep, data = run("b")
+    assert rep.streams["b"].replans == 1 and rep.streams["a"].replans == 0
+    assert rep.replan_events[0].stream == "b"
+    for name in ("a", "b"):
+        want = all_reduce_oracle(data[name])
+        for d in rep.streams[name].rank_data:
+            np.testing.assert_allclose(d, want, atol=1e-9)
+    with pytest.raises(EventSimError):
+        run("nope")
 
 
 # ---------------------------------------------------------------------------

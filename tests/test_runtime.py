@@ -18,7 +18,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.comm_sim import R2CCL_MIGRATION_LATENCY
-from repro.core.event_sim import simulate_program
+from repro.core.event_sim import simulate_program, simulate_streams
 from repro.core.failures import Failure, FailureType, nic_down_at
 from repro.core.schedule import ring_program
 from repro.core.topology import make_cluster
@@ -26,13 +26,17 @@ from repro.runtime import (
     ControlPlane,
     RecoveryState,
     Scenario,
+    StreamSpec,
+    build_engine_streams,
     clean_nic_down,
     failure_during_recovery,
     flap_storm,
     parse_campaign,
+    parse_streams,
     run_scenario,
     slow_nic_degradation,
     standard_campaigns,
+    standard_parallel_streams,
 )
 from repro.runtime.control_plane import STAGES
 
@@ -264,6 +268,81 @@ def test_serving_engine_hiccup_is_ledger_total():
         sum(out.entry.stages.values()))
     assert 1e-4 < out.entry.total < 10e-3
     assert out.decision.replan is None          # replanning disabled
+
+
+def test_nic_down_rebalance_reprices_all_streams(cluster, t_h):
+    """Regression (satellite of the multi-stream engine): the rebalance
+    decision's detour-efficiency capacity factor lands on the NODE, so
+    every stream crossing the failed rail is re-priced — not just the
+    gradient sync that observed the failure.  Pinned by comparing the
+    co-simulated run against a controller-less run with the SAME failure
+    and the SAME derived repair delay: the only remaining difference is
+    the rebalance re-pricing, and it must slow the TP/PP co-runners too."""
+    specs = standard_parallel_streams(PAYLOAD)
+    # inject early enough that even the small PP handoff is still in flight
+    sc = clean_nic_down(t_h, frac=0.1)
+    cos = run_scenario(sc, cluster, PAYLOAD, healthy_time=t_h, streams=specs)
+    entry = cos.ledger.entries[0]
+    assert entry.balance_efficiency < 1.0
+    assert any(d.capacity_scale for d in cos.decisions)
+    assert set(cos.report.streams) == {"dp", "tp", "pp"}
+
+    # identical engine run minus the control plane, repair delay matched
+    plain = simulate_streams(
+        build_engine_streams(ring_program(list(range(4)), 4), PAYLOAD,
+                             specs, 4),
+        cluster=cluster, failures=sc.failures,
+        repair_latency=entry.hot_repair_latency)
+    for name in ("dp", "tp", "pp"):
+        assert cos.report.streams[name].completion_time > \
+            plain.streams[name].completion_time * (1 + 1e-9), name
+
+
+def test_parse_streams_roundtrip():
+    specs = parse_streams(
+        "tp kind=allreduce frac=0.5 prio=2; pp kind=p2p frac=0.125 start=0.1 "
+        "root=1",
+        payload_scale=8e6, t_scale=2.0)
+    assert [s.name for s in specs] == ["tp", "pp"]
+    assert specs[0].kind == "allreduce"
+    assert specs[0].payload_bytes == pytest.approx(4e6)
+    assert specs[0].priority == 2.0
+    assert specs[1].kind == "p2p"
+    assert specs[1].payload_bytes == pytest.approx(1e6)
+    assert specs[1].start_time == pytest.approx(0.2)
+    assert specs[1].root == 1
+    with pytest.raises(ValueError):
+        parse_streams("tp kind=explode frac=0.5")
+    with pytest.raises(ValueError):
+        parse_streams("tp kind=allreduce bogus=1")
+    with pytest.raises(ValueError):
+        StreamSpec("tp", "allreduce", -1.0)
+    with pytest.raises(ValueError):
+        StreamSpec("tp", "allreduce", 1.0, priority=0.0)
+    # the managed-stream name is reserved and duplicates fail at parse
+    # time with a clear message, not at engine construction deep in a run
+    with pytest.raises(ValueError):
+        StreamSpec("dp", "allreduce", 1.0)
+    with pytest.raises(ValueError):
+        parse_streams("dp kind=allreduce frac=0.5")
+    with pytest.raises(ValueError):
+        parse_streams("tp frac=0.5; tp frac=0.25")
+
+
+def test_control_plane_reusable_after_streamed_scenario(cluster, t_h):
+    """Regression: a caller-provided ControlPlane must come out of a
+    streams= co-simulation unmutated (stream=None), so reusing it for a
+    later single-stream scenario — whose only stream is named \"main\" —
+    still resolves chunk progress instead of raising on an unknown
+    stream."""
+    cp = ControlPlane(cluster, payload_bytes=PAYLOAD)
+    run_scenario(clean_nic_down(t_h, frac=0.2), cluster, PAYLOAD,
+                 healthy_time=t_h, control_plane=cp,
+                 streams=standard_parallel_streams(PAYLOAD))
+    assert cp.stream is None
+    rep = run_scenario(clean_nic_down(t_h, node=2), cluster, PAYLOAD,
+                       healthy_time=t_h, control_plane=cp)
+    assert rep.report.completion_time > 0
 
 
 def test_scenario_dsl_roundtrip(t_h):
