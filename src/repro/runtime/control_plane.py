@@ -31,6 +31,7 @@ from repro.core.balance import BalancePlan, rebalance
 from repro.core.comm_sim import DETOUR_EFFICIENCY, _strategy_program
 from repro.core.detection import (
     BROADCAST_LATENCY,
+    PROBE_TIMEOUT,
     REPROBE_PERIOD,
     REPROBE_PERIOD_MAX,
     REPROBE_PERIOD_MIN,
@@ -38,6 +39,7 @@ from repro.core.detection import (
     adaptive_reprobe_period,
 )
 from repro.core.event_sim import ChunkProgress, RecoveryDecision
+from repro.core.telemetry import TraceLog
 from repro.core.failures import OUT_OF_SCOPE, Failure, FailureState, FailureType
 from repro.core.migration import ROLLBACK_CPU_COST, RegistrationTable
 from repro.core.planner import Collective, Planner, Strategy, collective_payload_factor
@@ -91,6 +93,10 @@ class LedgerEntry:
     #: fraction of the collective's payload still genuinely missing when a
     #: replan was planned (from the engine's chunk map); 1.0 = whole payload
     residual_fraction: float = 1.0
+    #: how the pipeline learned of the failure: ``"cqe"`` (oracle transport
+    #: event / OOB notify) or ``"monitor"`` (inferred from flow telemetry by
+    #: :mod:`repro.runtime.inference` — no CQE ever fired)
+    detected_by: str = "cqe"
 
     @property
     def total(self) -> float:
@@ -149,16 +155,26 @@ class ControlPlane:
         reprobe_base: float = REPROBE_PERIOD,
         state: FailureState | None = None,
         stream: str | None = None,
+        trace: TraceLog | None = None,
     ):
         self.cluster = cluster
         self.payload_bytes = float(payload_bytes)
         self.collective = collective
+        #: structured trace the pipeline mirrors itself into (``stage`` +
+        #: ``transition`` records) — every ledger entry is reconstructible
+        #: from it (:func:`repro.core.telemetry.ledger_entries_from_trace`)
+        self.trace = trace
         #: name of the engine stream this control plane manages — the
         #: collective whose chunk map prices replans and whose program a
         #: replan decision swaps (co-running streams keep flowing).  None =
         #: the engine's primary stream (the single-stream case).
         self.stream = stream
         self.flap_replan_threshold = flap_replan_threshold
+        if flap_window <= 0.0:
+            raise ValueError(
+                f"flap_window must be > 0 (seconds of virtual time over "
+                f"which flaps count toward the replan threshold), got "
+                f"{flap_window!r}")
         self.flap_window = float(flap_window)
         self.replan_enabled = replan
         #: base re-probe cadence; floor/ceiling scale with it so the adaptive
@@ -222,6 +238,26 @@ class ControlPlane:
     def _transition(self, t: float, state: RecoveryState) -> None:
         self.state = state
         self.transitions.append((t, state))
+        if self.trace is not None:
+            self.trace.add("transition", t, state=state.value)
+
+    def _trace_entry(self, entry: LedgerEntry) -> None:
+        """Mirror one just-recorded ledger entry into the trace: one
+        ``stage`` record per pipeline stage, stamped at the stage's virtual
+        start time, carrying the entry's index — the ledger must be exactly
+        reconstructible from these records (cross-validation contract)."""
+        if self.trace is None:
+            return
+        idx = len(self.ledger.entries) - 1
+        node = entry.failure.node if entry.failure is not None else -1
+        rail = entry.failure.rail if entry.failure is not None else -1
+        t = entry.t_start
+        for stage in STAGES:
+            if stage not in entry.stages:
+                continue
+            self.trace.add("stage", t, entry=idx, stage=stage,
+                           dur=entry.stages[stage], node=node, rail=rail)
+            t += entry.stages[stage]
 
     def _probe_points(
         self, failure: Failure
@@ -285,6 +321,8 @@ class ControlPlane:
         failure: Failure,
         now: float,
         progress: ChunkProgress | None = None,
+        *,
+        detected_by: str = "cqe",
     ) -> RecoveryOutcome | None:
         """Run the recovery pipeline for one failure event at virtual ``now``.
 
@@ -293,10 +331,21 @@ class ControlPlane:
         residual payload (what is genuinely missing) instead of the whole
         collective, and the ledger records the residual fraction.
 
+        ``detected_by`` names the detection channel: ``"cqe"`` (default) is
+        the oracle path — a transport error fired and bilateral awareness
+        timed the detect/diagnose stages; ``"monitor"`` means a telemetry
+        detector *inferred* the failure from flow counters (a silent
+        failure), so detection is charged the bandwidth monitor's sampling
+        latency and diagnosis the active probe burst + broadcast — there was
+        no CQE to make it faster.
+
         Returns None (and records the failure as unsupported) when R2CCL
         cannot act on it — out-of-scope types, or non-escalating hard
         failures; fractional-severity degradations are always handled.
         """
+        if detected_by not in ("cqe", "monitor"):
+            raise ValueError(
+                f"detected_by must be 'cqe' or 'monitor', got {detected_by!r}")
         if failure.ftype in OUT_OF_SCOPE:
             self.failure_state.unsupported.append(failure)
             return None
@@ -314,16 +363,30 @@ class ControlPlane:
         node_lost = False
 
         if escalated:
-            # DETECTING: bilateral awareness — CQE error + OOB peer notify.
-            self._transition(t, RecoveryState.DETECTING)
-            src, peer, aux = self._probe_points(failure)
-            diag = self.detector.detect(failure, src, peer, aux)
-            stages["detect"] = diag.detect_latency
-            t += diag.detect_latency
-            # DIAGNOSING: probe triangulation + diagnosis broadcast.
-            self._transition(t, RecoveryState.DIAGNOSING)
-            stages["diagnose"] = diag.localize_latency - diag.detect_latency
-            t += stages["diagnose"]
+            if detected_by == "monitor":
+                # DETECTING: no CQE fired — the bandwidth monitor's sampling
+                # window caught the throughput collapse instead.
+                self._transition(t, RecoveryState.DETECTING)
+                stages["detect"] = SLOW_NIC_DETECT_LATENCY
+                t += stages["detect"]
+                # DIAGNOSING: an active probe burst localizes the rail (the
+                # probe must *time out* — no error completion to shortcut
+                # it), then the diagnosis broadcast.
+                self._transition(t, RecoveryState.DIAGNOSING)
+                stages["diagnose"] = PROBE_TIMEOUT + BROADCAST_LATENCY
+                t += stages["diagnose"]
+            else:
+                # DETECTING: bilateral awareness — CQE error + OOB peer
+                # notify.
+                self._transition(t, RecoveryState.DETECTING)
+                src, peer, aux = self._probe_points(failure)
+                diag = self.detector.detect(failure, src, peer, aux)
+                stages["detect"] = diag.detect_latency
+                t += diag.detect_latency
+                # DIAGNOSING: probe triangulation + diagnosis broadcast.
+                self._transition(t, RecoveryState.DIAGNOSING)
+                stages["diagnose"] = diag.localize_latency - diag.detect_latency
+                t += stages["diagnose"]
             self.failure_state.apply(failure)
             # MIGRATING: rollback + pre-registered backup-NIC activation.
             self._transition(t, RecoveryState.MIGRATING)
@@ -343,6 +406,12 @@ class ControlPlane:
             self._transition(t, RecoveryState.DETECTING)
             stages["detect"] = SLOW_NIC_DETECT_LATENCY
             t += stages["detect"]
+            if detected_by == "monitor":
+                # Telemetry-inferred: the monitor only flagged *a* slowdown;
+                # the probe burst localizes which rail, then broadcasts.
+                self._transition(t, RecoveryState.DIAGNOSING)
+                stages["diagnose"] = PROBE_TIMEOUT + BROADCAST_LATENCY
+                t += stages["diagnose"]
 
         # REBALANCED: redistribute the detoured flows across healthy NICs.
         # Only an escalated failure orphans flows onto backup NICs (paying
@@ -399,8 +468,10 @@ class ControlPlane:
             failure=failure, t_start=now, stages=stages,
             state_after=self.state, backup_nic=backup, strategy=strategy,
             balance_efficiency=eff, residual_fraction=residual_fraction,
+            detected_by=detected_by,
         )
         self.ledger.record(entry)
+        self._trace_entry(entry)
         # The capacity scale is installed on the *node*: every stream whose
         # transfers cross the rebalanced NICs is re-priced by the detour
         # efficiency, not just the stream that observed the failure — the
@@ -475,9 +546,11 @@ class ControlPlane:
             prog, strategy = self._plan_program()
             stages = {"replan": REPLAN_COMPUTE_COST + BROADCAST_LATENCY}
             self._transition(now + stages["replan"], RecoveryState.REPLANNED)
-            self.ledger.record(LedgerEntry(
+            entry = LedgerEntry(
                 failure=None, t_start=now, stages=stages,
-                state_after=self.state, strategy=strategy))
+                state_after=self.state, strategy=strategy)
+            self.ledger.record(entry)
+            self._trace_entry(entry)
             self.current_program = prog
             return prog
         if not self.failure_state.failed_nics and \

@@ -25,11 +25,13 @@ from repro.core.event_sim import (
     simulate_program,
     simulate_streams,
 )
-from repro.core.failures import FailureState
+from repro.core.failures import FailureState, silenced
 from repro.core.schedule import CollectiveProgram, ring_program
+from repro.core.telemetry import Telemetry
 from repro.core.topology import ClusterTopology, DEFAULT_ALPHA
 
 from .control_plane import ControlPlane, RecoveryLedger, RecoveryState
+from .inference import DetectionEvent, DetectorConfig, TelemetryDetector
 from .scenarios import (
     MANAGED_STREAM,
     Scenario,
@@ -138,6 +140,11 @@ class CoSimReport:
     decisions: list[RecoveryDecision]
     healthy_time: float
     overhead: float                        # completion vs healthy ring - 1
+    #: the observability plane of the run, when one was attached (always in
+    #: ``detect="telemetry"`` mode)
+    telemetry: Telemetry | None = None
+    #: failures the telemetry detector inferred (empty in oracle mode)
+    detections: list[DetectionEvent] = dataclasses.field(default_factory=list)
 
     @property
     def failover_latency(self) -> float:
@@ -159,6 +166,9 @@ def run_scenario(
     finalize: bool = True,
     streams: Sequence[StreamSpec] = (),
     priority: float = 1.0,
+    telemetry: Telemetry | None = None,
+    detect: str = "oracle",
+    detector_config: DetectorConfig | None = None,
 ) -> CoSimReport:
     """Drive one failure campaign through the co-simulated runtime.
 
@@ -176,18 +186,49 @@ def run_scenario(
     managed stream's program.  ``healthy_time`` and ``overhead`` stay
     relative to the managed collective alone, so the reported overhead
     *includes* the contention cost.
+
+    ``detect`` selects the detection channel.  ``"oracle"`` (default) hands
+    every failure event to the control plane at its injection instant, as
+    before.  ``"telemetry"`` strips the oracle: the scenario's failures are
+    *silenced* (the engine applies their physics but never notifies the
+    controller — not even at t=0, so the initial program is planned blind),
+    and a :class:`TelemetryDetector` riding the sampling tick must infer
+    them from measured counters and probes, feeding the same pipeline with
+    ``detected_by="monitor"``.  A ``telemetry`` plane is auto-built at 64
+    samples per healthy collective when not supplied; either way the
+    control plane mirrors its ledger into the shared trace so every entry
+    is reconstructible from the export.
     """
+    if detect not in ("oracle", "telemetry"):
+        raise ValueError(
+            f"detect must be 'oracle' or 'telemetry', got {detect!r}")
     n = cluster.num_nodes
     g = cluster.devices_per_node
     order = list(range(n))
 
     cp = control_plane or ControlPlane(cluster, payload_bytes=payload_bytes)
-    prog = plan_initial_program(strategy, cluster, scenario.failures, g=g)
+    failures = scenario.failures
+    if detect == "telemetry":
+        failures = tuple(silenced(failures))
+        known_at_t0 = ()     # silent failures: the planner starts blind
+    else:
+        known_at_t0 = failures
+    prog = plan_initial_program(strategy, cluster, known_at_t0, g=g)
 
     if healthy_time is None:
         healthy_time = simulate_program(
             ring_program(order, n), payload_bytes, cluster=cluster,
             alpha=alpha).completion_time
+
+    detector: TelemetryDetector | None = None
+    if detect == "telemetry":
+        if telemetry is None:
+            telemetry = Telemetry.for_duration(healthy_time, samples=64)
+        if telemetry.observer is None:
+            telemetry.observer = TelemetryDetector(cp, detector_config)
+        detector = telemetry.observer
+    if telemetry is not None and cp.trace is None:
+        cp.trace = telemetry.trace
 
     adapter = _EngineAdapter(cp)
     if streams:
@@ -197,13 +238,13 @@ def run_scenario(
         report = simulate_streams(
             build_engine_streams(prog, payload_bytes, streams, n,
                                  priority=priority, rank_data=rank_data),
-            cluster=cluster, alpha=alpha, failures=scenario.failures,
-            controller=adapter)
+            cluster=cluster, alpha=alpha, failures=failures,
+            controller=adapter, telemetry=telemetry)
     else:
         report = simulate_program(
             prog, payload_bytes, cluster=cluster, alpha=alpha,
-            failures=scenario.failures, rank_data=rank_data,
-            controller=adapter)
+            failures=failures, rank_data=rank_data,
+            controller=adapter, telemetry=telemetry)
     if finalize:
         cp.finalize(report.completion_time)
 
@@ -214,7 +255,12 @@ def run_scenario(
         final_state=cp.state,
         transitions=list(cp.transitions),
         stage_totals=cp.ledger.stage_totals(),
-        decisions=adapter.decisions,
+        decisions=(adapter.decisions
+                   + [ev.outcome.decision for ev in
+                      (detector.detections if detector else [])
+                      if ev.outcome is not None]),
         healthy_time=healthy_time,
         overhead=report.completion_time / healthy_time - 1.0,
+        telemetry=telemetry,
+        detections=list(detector.detections) if detector else [],
     )

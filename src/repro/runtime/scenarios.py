@@ -43,6 +43,7 @@ from repro.core.failures import (
     flap_sequence,
     link_flap,
     nic_down_at,
+    silenced as silenced_failures,
     slow_nic,
 )
 from repro.core.schedule import (
@@ -65,6 +66,15 @@ class Scenario:
         object.__setattr__(
             self, "failures",
             tuple(sorted(self.failures, key=lambda f: f.at_time)))
+
+    def silenced(self) -> "Scenario":
+        """The same campaign with every failure's oracle notification
+        stripped: the engine still applies the physics, but only a
+        telemetry-driven detector can tell the control plane (the
+        oracle-free mode of :func:`runtime.cosim.run_scenario`)."""
+        return Scenario(f"{self.name}_silent",
+                        tuple(silenced_failures(self.failures)),
+                        note=self.note)
 
 
 #: name the runtime gives the control-plane-managed gradient-sync stream
@@ -455,20 +465,28 @@ def _parse_events(
                 f"(parse_training_campaign): {raw!r}")
         it = int(kv.pop("iter", 0))
         at = kv.pop("at", 0.0) * t_scale
+        # silent=1 strips the oracle notification from this event: the
+        # engine applies the physics, a telemetry detector must infer it
+        silent = bool(int(kv.pop("silent", 0)))
+        new: list[tuple[int, Failure]] = []
         if kind == "nic_down":
-            events.append((it, nic_down_at(node, rail, at)))
+            new.append((it, nic_down_at(node, rail, at)))
         elif kind == "flap":
-            events.append((it, link_flap(node, rail, at,
-                                         kv.pop("down") * t_scale)))
+            new.append((it, link_flap(node, rail, at,
+                                      kv.pop("down") * t_scale)))
         elif kind == "flaps":
-            events.extend((it, f) for f in flap_sequence(
+            new.extend((it, f) for f in flap_sequence(
                 node, rail, start=at, period=kv.pop("period") * t_scale,
                 down_for=kv.pop("down") * t_scale, count=int(kv.pop("count"))))
         elif kind == "slow":
-            events.append((it, slow_nic(node, rail, at,
-                                        lost_fraction=kv.pop("lost"))))
+            new.append((it, slow_nic(node, rail, at,
+                                     lost_fraction=kv.pop("lost"))))
         if kv:
             raise ValueError(f"unexpected fields {sorted(kv)} in event {raw!r}")
+        if silent:
+            new = [(it_, f) for (it_, _), f in
+                   zip(new, silenced_failures(f for _, f in new))]
+        events.extend(new)
     return events
 
 

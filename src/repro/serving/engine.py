@@ -39,6 +39,7 @@ from repro.core.comm_sim import (
     strategy_rate,
 )
 from repro.core.failures import Failure, FailureState
+from repro.core.telemetry import TraceLog, stage_totals_from_trace
 from repro.core.topology import make_cluster
 from repro.models import apply_model, init_caches
 from repro.runtime.control_plane import ControlPlane, LedgerEntry
@@ -85,7 +86,8 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, context_len: int = 512,
                  strategy: str = "r2ccl", nics_per_node: int = 8,
-                 tp: int = 8, pp: int = 2, cache_dtype=jnp.float32):
+                 tp: int = 8, pp: int = 2, cache_dtype=jnp.float32,
+                 trace: TraceLog | None = None):
         self.cfg = cfg
         self.params = params
         self.context_len = context_len
@@ -106,13 +108,39 @@ class ServingEngine:
         self.control_plane = ControlPlane(
             make_cluster(max(2, pp), nics_per_node), replan=False,
             state=self.failure_state)
+        # Structured trace shared with the control plane: every recovery
+        # pipeline run mirrors its per-stage spans here, so a serving
+        # hiccup is attributable to the stage that caused it.
+        self.trace = trace if trace is not None else TraceLog()
+        self.control_plane.trace = self.trace
         self.last_recovery: LedgerEntry | None = None
 
     # -- failure plumbing ---------------------------------------------------
-    def inject_failure(self, failure: Failure) -> bool:
+    def inject_failure(self, failure: Failure, at: float = 0.0) -> bool:
         """Apply a failure; returns whether serving can continue in-place."""
         ok = self.failure_state.apply(failure)
+        self.trace.add("failure", at, node=failure.node, rail=failure.rail,
+                       kind=failure.ftype.value, severity=failure.severity,
+                       silent=failure.silent)
         return ok and self.strategy in ("r2ccl", "dejavu")
+
+    def hiccup_attribution(self, *, normalize: bool = False) -> dict[str, float]:
+        """Attribute serving hiccup time to recovery-pipeline stages.
+
+        Reconstructed purely from the trace's ``stage`` spans (the control
+        plane mirrors every ledger stage there), so the answer to "what was
+        the token stall spent on" — detect vs diagnose vs migrate vs
+        rebalance — comes from the export, not from engine-internal state.
+        Returns per-stage virtual seconds (or fractions of the hiccup total
+        with ``normalize=True``); empty for strategies that never run the
+        pipeline (restart / reroute / dejavu)."""
+        totals = stage_totals_from_trace(self.trace.records)
+        if not normalize:
+            return totals
+        total = sum(totals.values())
+        if total <= 0.0:
+            return {}
+        return {k: v / total for k, v in totals.items()}
 
     def _degraded_rate(self) -> float:
         """Residual comm-rate multiplier under the current failures."""
@@ -155,7 +183,7 @@ class ServingEngine:
         step = 0
         while step < max_new - 1:
             if fail_at_step is not None and step == fail_at_step and failure is not None:
-                can_continue = self.inject_failure(failure)
+                can_continue = self.inject_failure(failure, at=vtime)
                 if self.strategy == "restart":
                     vtime += VLLM_RESTART_DELAY
                     # reprocess everything generated so far

@@ -70,12 +70,14 @@ def test_training_bench_tiny_campaign():
     assert rows["campaign_degraded_dp_comm"] > 0.0
 
 
-def test_runtime_bench_tiny_campaign_sweep():
+def test_runtime_bench_tiny_campaign_sweep(tmp_path):
     """The bench_runtime campaign sweep rows (clean / flap storm / slow
     NIC over 3 iterations) must be emitted with ledger totals, and the
     mid-collective replan scenario (payload-conserving program swap) must
-    report its retransmission/residual accounting."""
-    bench_main(["--only", "runtime", "--tiny"])
+    report its retransmission/residual accounting.  Runs with ``--trace``
+    so the export path (JSONL + Chrome) is exercised on every push."""
+    trace_path = str(tmp_path / "run.trace.jsonl")
+    bench_main(["--only", "runtime", "--tiny", "--trace", trace_path])
     rows = _rows("runtime_recovery")
     for name in ("campaign_clean_nic_down", "campaign_flap_storm",
                  "campaign_slow_nic"):
@@ -99,3 +101,29 @@ def test_runtime_bench_tiny_campaign_sweep():
     assert rows["nic_down_contention_ratio"] >= 1.0 - 1e-9
     assert rows["nic_down_contended_dp_time"] > 0.0
     assert rows["stream_priority_dp_speedup"] > 1.0
+    # telemetry-inferred detection rows: the oracle-free loop detected the
+    # clean NIC-down, recovered through the ledger, and the exported trace
+    # reconstructs every stage (cross-validation bit must be exactly 1)
+    assert rows["clean_nic_down_monitor_ledger_total"] > 0.0
+    assert rows["telemetry_trace_ledger_match"] == 1.0
+    assert rows["monitor_vs_oracle_detect"] >= 1.0
+    # --trace wrote both export formats and they parse + validate
+    from repro.core.telemetry import validate_trace_schema
+    with open(trace_path) as f:
+        records = [json.loads(ln) for ln in f if ln.strip()]
+    assert len(records) == rows["trace_records"]
+    validate_trace_schema(records)
+    with open(trace_path + ".chrome.json") as f:
+        assert json.load(f)["traceEvents"]
+
+
+def test_engine_perf_bench_tiny():
+    """Event-engine throughput bench: the telemetry acceptance row (wall
+    overhead with the monitor attached at its 64-sample budget) must stay
+    under the 10% ceiling, and the throughput rows must be positive."""
+    bench_main(["--only", "engine_perf", "--tiny"])
+    rows = _rows("BENCH_event_engine")
+    assert rows["healthy_events_per_sec"] > 0.0
+    assert rows["stress_events"] > 0.0
+    assert rows["stress_wall_time"] > 0.0
+    assert rows["telemetry_overhead"] < 0.10

@@ -97,6 +97,21 @@ def test_adaptive_reprobe_period():
         adaptive_reprobe_period(-1)
 
 
+def test_adaptive_reprobe_period_edge_cases():
+    from repro.core.detection import adaptive_reprobe_period
+
+    # zero flaps with base already below the floor: clamp up, exactly
+    assert adaptive_reprobe_period(0, base=0.1, floor=0.25, ceiling=8.0) \
+        == 0.25
+    # storm saturating the ceiling: 2**k growth must not overflow past it
+    assert adaptive_reprobe_period(500, base=1.0, floor=0.25, ceiling=8.0) \
+        == 8.0
+    # degenerate clamp floor == ceiling: every flap count maps to the point
+    for k in (0, 1, 3, 10):
+        assert adaptive_reprobe_period(k, base=1.0, floor=2.0, ceiling=2.0) \
+            == 2.0
+
+
 def test_reprobe_cadence_feeds_flap_count():
     det = FailureDetector(FailureState())
     _, stable = det.reprobe((0, 0), now=0.0, recovered=False, flap_count=0)

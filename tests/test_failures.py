@@ -4,11 +4,17 @@ Severities outside (0, 1] used to be silently accepted and then
 misinterpreted by the slow-NIC bandwidth spectrum (a severity of 1.5 would
 subtract more than the rail's bandwidth; 0 or negative meant "failure that
 removes nothing").  Construction now rejects them.
+
+Same pattern for the control-plane tuning knobs: a zero/negative
+``flap_window`` or ``reprobe_base`` used to propagate into division and
+scheduling arithmetic before blowing up far from the bad argument.
 """
 
 import pytest
 
-from repro.core.failures import Failure, FailureType, nic_down_at, slow_nic
+from repro.core.failures import Failure, FailureType, nic_down_at, silenced, slow_nic
+from repro.core.topology import make_cluster
+from repro.runtime import ControlPlane
 
 
 def test_severity_one_and_fractional_accepted():
@@ -28,3 +34,26 @@ def test_severity_out_of_domain_rejected(bad):
 def test_nan_severity_rejected():
     with pytest.raises(ValueError, match="severity"):
         Failure(FailureType.NIC_HARDWARE, 0, 0, severity=float("nan"))
+
+
+def test_silenced_preserves_everything_but_the_oracle_bit():
+    fs = [Failure(FailureType.NIC_HARDWARE, 0, 0, at_time=1.0),
+          slow_nic(1, 2, 2.0, lost_fraction=0.5)]
+    quiet = silenced(fs)
+    assert all(f.silent for f in quiet)
+    assert not any(f.silent for f in fs)        # originals untouched
+    assert [(f.ftype, f.node, f.rail, f.at_time, f.severity) for f in quiet] \
+        == [(f.ftype, f.node, f.rail, f.at_time, f.severity) for f in fs]
+
+
+@pytest.mark.parametrize("kw", [{"flap_window": 0.0}, {"flap_window": -1.0},
+                                {"reprobe_base": 0.0}, {"reprobe_base": -0.5}])
+def test_control_plane_rejects_nonpositive_tuning(kw):
+    with pytest.raises(ValueError, match=next(iter(kw))):
+        ControlPlane(make_cluster(2, 4), **kw)
+
+
+def test_control_plane_accepts_positive_tuning():
+    cp = ControlPlane(make_cluster(2, 4), flap_window=5.0, reprobe_base=0.5)
+    assert cp.flap_window == 5.0
+    assert cp.reprobe_base == 0.5

@@ -115,3 +115,23 @@ def test_serve_trace_failure_strategies_ordering(setup):
             failure=Failure(FailureType.NIC_HARDWARE, 0, 0))
     assert outs["r2ccl"].ttft_p95 < outs["restart"].ttft_p95
     assert outs["r2ccl"].failovers == 1
+
+
+def test_hiccup_attribution_from_trace(setup):
+    """Hiccup attribution comes from trace stage spans alone and matches
+    the ledger's stage totals; fractions sum to 1; diagnose (probe timeout
+    + broadcast) dominates the clean NIC-down budget."""
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, context_len=64, strategy="r2ccl")
+    assert eng.hiccup_attribution() == {}          # nothing happened yet
+    fail = Failure(FailureType.NIC_HARDWARE, 1, 0)
+    eng.run_batch(_reqs(cfg), fail_at_step=2, failure=fail)
+    attr = eng.hiccup_attribution()
+    assert attr == pytest.approx(
+        {k: v for k, v in eng.last_recovery.stages.items() if v > 0})
+    frac = eng.hiccup_attribution(normalize=True)
+    assert sum(frac.values()) == pytest.approx(1.0)
+    assert max(frac, key=frac.get) == "diagnose"
+    # the failure injection itself is on the trace too
+    kinds = {r["type"] for r in eng.trace.records}
+    assert {"failure", "stage", "transition"} <= kinds

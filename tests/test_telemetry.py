@@ -1,0 +1,220 @@
+"""Telemetry plane: metrics registry, structured trace, exports, and the
+ledger<->trace cross-validation contract."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.event_sim import simulate_program
+from repro.core.failures import Failure, FailureType
+from repro.core.schedule import ring_program
+from repro.core.telemetry import (
+    TRACE_SCHEMA,
+    MetricsRegistry,
+    Series,
+    Telemetry,
+    TraceLog,
+    ledger_entries_from_trace,
+    ledger_total_from_trace,
+    stage_totals_from_trace,
+    validate_trace_schema,
+)
+from repro.core.topology import make_cluster
+from repro.runtime import clean_nic_down, run_scenario
+
+
+# -- Series / registry -------------------------------------------------------
+
+def test_series_ring_buffer_retains_newest():
+    s = Series(capacity=4)
+    for i in range(7):
+        s.append(float(i), float(i * 10))
+    assert len(s) == 4
+    assert s.dropped == 3
+    assert list(s.times()) == [3.0, 4.0, 5.0, 6.0]
+    assert list(s.values()) == [30.0, 40.0, 50.0, 60.0]
+    assert s.last() == (6.0, 60.0)
+
+
+def test_series_empty_and_validation():
+    s = Series(capacity=2)
+    assert len(s) == 0 and s.last() is None
+    assert list(s.times()) == []
+    with pytest.raises(ValueError, match="capacity"):
+        Series(capacity=0)
+
+
+def test_registry_keys_and_last():
+    reg = MetricsRegistry(capacity=8)
+    reg.record("rank.tx_rate", (0,), 0.0, 1.5)
+    reg.record("rank.tx_rate", (1,), 0.0, 2.5)
+    reg.record("stream.goodput", ("dp",), 0.0, 9.0)
+    assert reg.last("rank.tx_rate", (0,)) == 1.5
+    assert reg.last("rank.tx_rate", (1,)) == 2.5
+    assert reg.last("rank.tx_rate", (2,)) is None
+    assert reg.series("nope", ()) is None
+    assert ("stream.goodput", ("dp",)) in reg.names()
+    # handle() returns the same live series record() feeds
+    h = reg.handle("rank.tx_rate", (0,))
+    h.append(1.0, 3.5)
+    assert reg.last("rank.tx_rate", (0,)) == 3.5
+    with pytest.raises(ValueError, match="capacity"):
+        MetricsRegistry(capacity=0)
+
+
+# -- trace log ---------------------------------------------------------------
+
+def test_trace_log_trims_oldest():
+    tl = TraceLog(max_records=100)
+    for i in range(101):
+        tl.add("sample", float(i), seq=i)
+    assert len(tl.records) <= 100
+    assert tl.dropped >= 1
+    # the newest record survives, the oldest went first
+    assert tl.records[-1]["seq"] == 100
+    assert tl.records[0]["seq"] == tl.dropped
+    with pytest.raises(ValueError, match="max_records"):
+        TraceLog(max_records=0)
+
+
+def test_trace_jsonl_roundtrip(tmp_path):
+    tl = TraceLog()
+    tl.add("failure", 0.5, node=1, rail=0, kind="nic_hardware",
+           severity=1.0, silent=True)
+    tl.add("recovery", 0.9, node=1, rail=0)
+    path = tmp_path / "trace.jsonl"
+    tl.write_jsonl(str(path))
+    lines = path.read_text().strip().splitlines()
+    assert len(lines) == 2
+    back = [json.loads(ln) for ln in lines]
+    assert back == tl.records
+    validate_trace_schema(back)
+
+
+def test_validate_trace_schema_rejects_drift():
+    with pytest.raises(ValueError, match="unknown trace type"):
+        validate_trace_schema([{"type": "mystery", "t": 0.0}])
+    with pytest.raises(ValueError, match="fields"):
+        validate_trace_schema([{"type": "recovery", "t": 0.0, "node": 1}])
+    with pytest.raises(ValueError, match="fields"):
+        validate_trace_schema([{"type": "recovery", "t": 0.0, "node": 1,
+                                "rail": 0, "extra": 1}])
+
+
+def test_trace_schema_pins_record_fields():
+    """The exported JSONL field sets are a compatibility surface (nightly CI
+    uploads the trace as an artifact): changing a record type must be a
+    deliberate schema edit here, not an accident."""
+    assert TRACE_SCHEMA["transfer_start"] == (
+        "t", "tid", "seg", "stream", "src", "dst", "bytes")
+    assert TRACE_SCHEMA["rollback"] == (
+        "t", "tid", "stream", "src", "dst", "sent_bytes", "delay")
+    assert TRACE_SCHEMA["failure"] == (
+        "t", "node", "rail", "kind", "severity", "silent")
+    assert TRACE_SCHEMA["stage"] == ("t", "entry", "stage", "dur", "node",
+                                     "rail")
+    assert TRACE_SCHEMA["probe"] == ("t", "node", "rail", "outcome",
+                                     "bw_fraction")
+    assert TRACE_SCHEMA["detection"] == ("t", "node", "rail", "kind",
+                                         "severity")
+    assert set(TRACE_SCHEMA) == {
+        "transfer_start", "transfer_finish", "rollback", "failure",
+        "recovery", "recovery_confirmed", "replan", "probe", "stage",
+        "transition", "detection", "detection_cleared", "sample"}
+
+
+# -- telemetry bundle --------------------------------------------------------
+
+def test_telemetry_sample_period_validation():
+    with pytest.raises(ValueError, match="sample_period"):
+        Telemetry(sample_period=0.0)
+    with pytest.raises(ValueError, match="sample_period"):
+        Telemetry(sample_period=-1e-3)
+    tm = Telemetry.for_duration(1.0, samples=50)
+    assert tm.sample_period == pytest.approx(0.02)
+    with pytest.raises(ValueError, match="duration"):
+        Telemetry.for_duration(0.0)
+    with pytest.raises(ValueError, match="sample"):
+        Telemetry.for_duration(1.0, samples=0)
+
+
+# -- engine integration ------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def traced_run():
+    cluster = make_cluster(4, 8)
+    payload = 4e8
+    order = list(range(4))
+    t_h = simulate_program(ring_program(order, 4), payload,
+                           cluster=cluster).completion_time
+    tm = Telemetry.for_duration(t_h, samples=64)
+    rep = run_scenario(clean_nic_down(t_h), cluster, payload,
+                       healthy_time=t_h, telemetry=tm)
+    return rep, tm, t_h
+
+
+def test_engine_emits_schema_valid_trace(traced_run):
+    rep, tm, _ = traced_run
+    types = {r["type"] for r in tm.trace.records}
+    assert {"transfer_start", "transfer_finish", "sample", "failure",
+            "stage", "transition"} <= types
+    validate_trace_schema(tm.trace.records)
+
+
+def test_engine_samples_counters(traced_run):
+    rep, tm, t_h = traced_run
+    s = tm.registry.series("rank.tx_rate", (0,))
+    assert s is not None and len(s) > 10
+    # rates are sampled while the collective is moving bytes
+    assert float(np.max(s.values())) > 0.0
+    assert tm.registry.series("stream.goodput", ("main",)) is not None
+    assert tm.registry.series("stream.remaining", ("main",)) is not None
+    # sample times advance at the configured cadence
+    times = s.times()
+    assert np.all(np.diff(times) > 0)
+
+
+def test_ledger_reconstructible_from_trace(traced_run):
+    """Cross-validation contract: every LedgerEntry stage breakdown is
+    recoverable from the exported trace alone, and the totals agree."""
+    rep, tm, _ = traced_run
+    records = json.loads("[%s]" % ",".join(
+        json.dumps(r) for r in tm.trace.records))   # via serialized form
+    recon = ledger_entries_from_trace(records)
+    assert recon == [e.stages for e in rep.ledger.entries]
+    assert stage_totals_from_trace(records) == pytest.approx(
+        rep.ledger.stage_totals())
+    assert ledger_total_from_trace(records) == pytest.approx(
+        rep.ledger.total_latency())
+
+
+def test_chrome_trace_export(tmp_path, traced_run):
+    rep, tm, _ = traced_run
+    doc = tm.trace.to_chrome_trace()
+    events = doc["traceEvents"]
+    assert events, "no chrome events"
+    phases = {e["ph"] for e in events}
+    assert "X" in phases and "M" in phases
+    slices = [e for e in events if e["ph"] == "X"]
+    assert all(e["dur"] >= 0 for e in slices)
+    names = {e["name"] for e in slices}
+    # transfer slices and control-plane stage slices both present
+    assert any(n.startswith("xfer") for n in names)
+    assert {"detect", "diagnose"} <= names
+    path = tmp_path / "trace.json"
+    tm.trace.write_chrome_trace(str(path))
+    assert json.loads(path.read_text())["traceEvents"]
+
+
+def test_telemetry_does_not_change_physics():
+    """Attaching the observability plane must not perturb virtual time."""
+    cluster = make_cluster(2, 4)
+    payload = 4e8
+    t_plain = simulate_program(ring_program([0, 1], 2), payload,
+                               cluster=cluster).completion_time
+    t_tm = simulate_program(
+        ring_program([0, 1], 2), payload, cluster=cluster,
+        telemetry=Telemetry.for_duration(t_plain, samples=32),
+    ).completion_time
+    assert t_tm == pytest.approx(t_plain, rel=1e-12)
