@@ -116,6 +116,41 @@ def run(tiny: bool = False, seed: int = 0, trace: str | None = None) -> None:
     r.row("mid_replan_payload_max_error", err,
           "max |allreduce - oracle| through the swap; ~0 = lossless")
 
+    # --- verified replans: static-analysis cost on the hot swap path --------
+    # verify_replans=True routes every planner program and residual resume
+    # program through repro.analysis.verify (abstract-interpretation
+    # AllReduce proof + deadlock check) before instantiation.  Acceptance:
+    # < 10% wall overhead on the mid-replan campaign.  Interleaved
+    # min-over-reps so one-off scheduler noise cannot fake an overhead.
+    import time as _time
+
+    def _replan_wall(verify: bool):
+        t0 = _time.perf_counter()
+        rep = run_scenario(
+            flap_storm(t_r, node=min(1, servers - 1), count=4), cluster,
+            replan_payload, healthy_time=t_r, verify_replans=verify)
+        return _time.perf_counter() - t0, rep
+
+    walls = {False: [], True: []}
+    brep = vrep = None
+    for _ in range(5):
+        for mode in (False, True):
+            w, rep = _replan_wall(mode)
+            walls[mode].append(w)
+            if mode:
+                vrep = rep
+            else:
+                brep = rep
+    base_w, ver_w = min(walls[False]), min(walls[True])
+    overhead = ver_w / base_w - 1.0
+    r.row("mid_replan_verify_overhead", overhead,
+          f"verified {ver_w * 1e3:.3g}ms vs base {base_w * 1e3:.3g}ms over "
+          f"{vrep.report.replans} swap(s); acceptance < 10%")
+    r.row("mid_replan_verified_equal",
+          float(vrep.report.completion_time
+                == brep.report.completion_time),
+          "verification is observation-only: identical swap timeline")
+
     # --- concurrent TP/PP/DP streams sharing NICs (contention rows) ---------
     # Real training parallelism runs three collective streams at once over
     # the same fabric: the DP gradient sync, the TP activation AllReduce,

@@ -1,0 +1,20 @@
+#!/usr/bin/env bash
+# Static-analysis gate: determinism lint + schedule verifier.
+#
+#   scripts/lint.sh              # lint src/repro/core + src/repro/runtime,
+#                                # then verify the full builder corpus
+#   scripts/lint.sh <paths...>   # lint only the given files/dirs (the
+#                                # verifier still runs over the corpus)
+#
+# The lint (repro.analysis.lint) forbids nondeterminism in simulator code:
+# wall-clock reads, unseeded RNGs, bare-set iteration, float == on
+# timestamps, frozen-dataclass mutation (rules DET001–DET005).  The
+# verifier (repro.analysis.verify) proves every builder schedule computes
+# its collective and cannot deadlock.  Both exit non-zero on any finding.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m repro.analysis lint "$@"
+python -m repro.analysis verify

@@ -1,0 +1,64 @@
+"""Static analysis over the collective-schedule IR and the simulator.
+
+Two passes:
+
+* :mod:`repro.analysis.verify` — schedule verifier: legality, abstract
+  interpretation over contribution multisets (AllReduce / Reduce /
+  ReduceScatter / AllGather / Broadcast proofs), and deadlock-freedom of
+  the per-rank lockstep dependency graph.
+* :mod:`repro.analysis.lint` — AST determinism lint over
+  ``core/event_sim.py`` and ``runtime/`` (rules DET001–DET005).
+
+Run both from the command line: ``python -m repro.analysis``.
+"""
+
+from .errors import (
+    DataflowError,
+    DeadlockError,
+    DoubleReduceError,
+    ProgramError,
+    Provenance,
+    ResultError,
+    ResultRanksError,
+    ScheduleError,
+    StaleReadError,
+    StepLegalityError,
+)
+from .verify import (
+    Semantics,
+    VerifyReport,
+    check_deadlock_free,
+    check_program,
+    check_schedule,
+    check_step,
+    infer_semantics,
+    verify_program,
+    verify_schedule,
+)
+from .lint import DEFAULT_LINT_TARGETS, LintFinding, lint_paths, lint_source
+
+__all__ = [
+    "DataflowError",
+    "DeadlockError",
+    "DoubleReduceError",
+    "ProgramError",
+    "Provenance",
+    "ResultError",
+    "ResultRanksError",
+    "ScheduleError",
+    "StaleReadError",
+    "StepLegalityError",
+    "Semantics",
+    "VerifyReport",
+    "check_deadlock_free",
+    "check_program",
+    "check_schedule",
+    "check_step",
+    "infer_semantics",
+    "verify_program",
+    "verify_schedule",
+    "DEFAULT_LINT_TARGETS",
+    "LintFinding",
+    "lint_paths",
+    "lint_source",
+]

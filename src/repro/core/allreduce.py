@@ -51,9 +51,18 @@ def build_partial_all_reduce(
     The degraded rank only touches the network twice (send Y*D, recv Y*D),
     which is what removes it from the bandwidth-critical path.
     """
+    from repro.analysis.errors import Provenance, ScheduleError
+
     k = len(healthy_order)
-    assert k >= 2, "partial AllReduce needs >= 2 healthy ranks"
-    assert degraded not in healthy_order
+    if k < 2:
+        raise ScheduleError(
+            f"partial AllReduce needs >= 2 healthy ranks, got {k}",
+            Provenance(schedule=f"partial_ar[{k}]+bridge"))
+    if degraded in healthy_order:
+        raise ScheduleError(
+            f"degraded rank {degraded} must not appear in healthy_order "
+            f"{list(healthy_order)}",
+            Provenance(schedule=f"partial_ar[{k}]+bridge", rank=degraded))
     h0, hlast = healthy_order[0], healthy_order[-1]
 
     def whole(src: int, dst: int, accumulate: bool) -> Step:
@@ -98,7 +107,12 @@ def build_r2ccl_all_reduce(
     """
     n = n_ranks if n_ranks is not None else len(ring_order)
     order = list(ring_order)
-    assert degraded in order
+    if degraded not in order:
+        from repro.analysis.errors import Provenance, ScheduleError
+
+        raise ScheduleError(
+            f"degraded rank {degraded} not in ring_order {order}",
+            Provenance(schedule="r2ccl_all_reduce", rank=degraded))
     plan = plan_partition(x, n=len(order), g=g, practice_threshold=practice_threshold)
 
     if not plan.use_r2ccl:

@@ -526,6 +526,7 @@ class EventSimulator:
         initial_failures: Sequence[
             tuple[Failure, Mapping[int, float] | None]] = (),
         telemetry: Telemetry | None = None,
+        verify_replans: bool = False,
     ):
         if streams is None:
             if prog is None or total_bytes is None:
@@ -545,9 +546,18 @@ class EventSimulator:
         names = [s.name for s in streams]
         if len(set(names)) != len(names):
             raise EventSimError(f"stream names must be unique: {names}")
+        # Statically verify every dynamically generated replan resume
+        # program (and the initial stream programs) before instantiation:
+        # abstract-interpretation AllReduce/broadcast proof + deadlock
+        # check from repro.analysis.verify, not just legality.
+        self.verify_replans = verify_replans
         n = streams[0].program.n
         for s in streams:
             s.program.validate()
+            if verify_replans:
+                from repro.analysis.verify import verify_program
+
+                verify_program(s.program)
             if s.program.n != n:
                 raise EventSimError(
                     f"stream {s.name!r} has {s.program.n} ranks but stream "
@@ -756,7 +766,7 @@ class EventSimulator:
                 if t.seg != seg_base + si:
                     continue
                 prereqs: set[int] = set()
-                for r in {t.src, t.dst}:
+                for r in sorted({t.src, t.dst}):
                     steps = rank_steps[r]
                     pos = steps.index(t.step)
                     if pos > 0:
@@ -766,7 +776,7 @@ class EventSimulator:
                             prereqs.add(p.tid)
                 prereqs.discard(t.tid)
                 t.deps = len(prereqs)
-                for p in prereqs:
+                for p in sorted(prereqs):
                     self.transfers[p].dependents.append(t.tid)
         return new
 
@@ -1121,6 +1131,10 @@ class EventSimulator:
         flowing through the swap.
         """
         prog.validate()
+        if self.verify_replans:
+            from repro.analysis.verify import verify_program
+
+            verify_program(prog)
         strm = self._streams[stream_idx]
         if prog.n != self.n:
             raise EventSimError(
@@ -1199,6 +1213,10 @@ class EventSimulator:
         residual_prog = CollectiveProgram(
             f"residual[{prog.name}]", n, segments)
         residual_prog.validate()
+        if self.verify_replans:
+            from repro.analysis.verify import verify_program
+
+            verify_program(residual_prog)
 
         if strm.has_data:
             # Re-reduce region: pristine contributions of every chunk final
@@ -1511,6 +1529,7 @@ def simulate_program(
     controller: object | None = None,
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
     telemetry: Telemetry | None = None,
+    verify_replans: bool = False,
 ) -> EventSimReport:
     """Execute ``prog`` on the discrete-event engine.
 
@@ -1531,6 +1550,7 @@ def simulate_program(
         alpha=alpha, failures=failures, rank_data=rank_data,
         repair_latency=repair_latency, controller=controller,
         initial_failures=initial_failures, telemetry=telemetry,
+        verify_replans=verify_replans,
     ).run()
 
 
@@ -1546,6 +1566,7 @@ def simulate_streams(
     controller: object | None = None,
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
     telemetry: Telemetry | None = None,
+    verify_replans: bool = False,
 ) -> EventSimReport:
     """Co-simulate a set of concurrent collective streams on one fabric.
 
@@ -1564,7 +1585,7 @@ def simulate_streams(
         streams=streams, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, repair_latency=repair_latency,
         controller=controller, initial_failures=initial_failures,
-        telemetry=telemetry,
+        telemetry=telemetry, verify_replans=verify_replans,
     ).run()
 
 

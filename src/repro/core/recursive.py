@@ -90,6 +90,13 @@ def spectrum_levels(
     # drop dust levels, renormalize
     levels = [lv for lv in levels if lv.frac >= min_frac or lv is levels[0]]
     s = sum(lv.frac for lv in levels)
+    if s <= 0.0:
+        # degenerate spectrum: every level has zero incremental bandwidth
+        # (e.g. the minimum is 0 with ties) — fall back to an even split so
+        # the program still sums to 1 instead of dividing by zero
+        for lv in levels:
+            lv.frac = 1.0 / len(levels)
+        return levels
     for lv in levels:
         lv.frac /= s
     return levels
@@ -101,7 +108,12 @@ def _multi_bridge_ring(
     """Ring AllReduce over ``members`` with injection/delivery edges for every
     excluded node (generalizes ``allreduce.build_partial_all_reduce``)."""
     k = len(members)
-    assert k >= 2
+    if k < 2:
+        from repro.analysis.errors import Provenance, ScheduleError
+
+        raise ScheduleError(
+            f"bridged sub-ring needs >= 2 members, got {list(members)}",
+            Provenance(schedule=f"subring_ar[{k}]"))
     order = list(members)
 
     def whole(src: int, dst: int, accumulate: bool) -> Step:

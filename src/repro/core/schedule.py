@@ -48,16 +48,11 @@ class Step:
     whole_buffer: bool = False
 
     def validate(self, n: int, num_chunks: int) -> None:
-        srcs = [s for s, _ in self.perm]
-        dsts = [d for _, d in self.perm]
-        assert len(set(srcs)) == len(srcs), f"duplicate sources in {self.perm}"
-        assert len(set(dsts)) == len(dsts), f"duplicate destinations in {self.perm}"
-        assert len(self.send_chunk) == n and len(self.recv_chunk) == n
-        for s, d in self.perm:
-            assert 0 <= s < n and 0 <= d < n
-            if not self.whole_buffer:
-                assert 0 <= self.send_chunk[s] < num_chunks, (s, self.send_chunk)
-                assert 0 <= self.recv_chunk[d] < num_chunks, (d, self.recv_chunk)
+        """ppermute legality; raises :class:`repro.analysis.errors
+        .StepLegalityError` (typed, survives ``python -O``) on violation."""
+        from repro.analysis.verify import check_step
+
+        check_step(self, n, num_chunks)
 
 
 @dataclasses.dataclass
@@ -73,8 +68,12 @@ class ChunkSchedule:
     result_ranks: tuple[int, ...] = ()
 
     def validate(self) -> None:
-        for s in self.steps:
-            s.validate(self.n, self.num_chunks)
+        """Schedule-level legality (every step, ``result_ranks`` in range);
+        raises typed :class:`repro.analysis.errors.ScheduleError`\\ s with
+        step/rank/chunk provenance."""
+        from repro.analysis.verify import check_schedule
+
+        check_schedule(self)
 
     # -- analysis ------------------------------------------------------------
     def bytes_per_rank(self, seg_bytes: float) -> dict[int, dict[str, float]]:
@@ -118,7 +117,7 @@ class ChunkSchedule:
         """
         out: dict[int, list[int]] = {r: [] for r in range(self.n)}
         for i, parts in enumerate(self.step_participants()):
-            for r in parts:
+            for r in sorted(parts):
                 out[r].append(i)
         return out
 
@@ -142,13 +141,12 @@ class CollectiveProgram:
     segments: list[Segment]
 
     def validate(self) -> None:
-        assert abs(sum(s.frac for s in self.segments) - 1.0) < 1e-9, (
-            f"segment fractions must sum to 1, got "
-            f"{[s.frac for s in self.segments]}"
-        )
-        for s in self.segments:
-            assert s.schedule.n == self.n
-            s.schedule.validate()
+        """Program-level legality (fractions sum to 1, rank counts agree,
+        every segment schedule legal); raises typed
+        :class:`repro.analysis.errors.ProgramError` on violation."""
+        from repro.analysis.verify import check_program
+
+        check_program(self)
 
     def bytes_per_rank(self, total_bytes: float) -> dict[int, dict[str, float]]:
         out = {r: {"tx": 0.0, "rx": 0.0} for r in range(self.n)}

@@ -122,6 +122,7 @@ def run_campaign(
     rank_data: Sequence[np.ndarray] | None = None,
     healthy_time: float | None = None,
     streams: Sequence[StreamSpec] | None = None,
+    verify_replans: bool = False,
 ) -> CampaignReport:
     """Drive a multi-iteration failure campaign through the co-simulated
     runtime with one persistent control plane.
@@ -191,12 +192,13 @@ def run_campaign(
                 streams=build_engine_streams(
                     prog, payload_bytes, specs, n, rank_data=data),
                 alpha=alpha, failures=fails, controller=adapter,
-                initial_failures=carry, **placement)
+                initial_failures=carry, verify_replans=verify_replans,
+                **placement)
         else:
             sim = EventSimulator(
                 prog, payload_bytes, alpha=alpha, failures=fails,
                 rank_data=data, controller=adapter, initial_failures=carry,
-                **placement)
+                verify_replans=verify_replans, **placement)
         entries_before = len(cp.ledger.entries)
         report = sim.run()
 

@@ -169,6 +169,7 @@ def run_scenario(
     telemetry: Telemetry | None = None,
     detect: str = "oracle",
     detector_config: DetectorConfig | None = None,
+    verify_replans: bool = False,
 ) -> CoSimReport:
     """Drive one failure campaign through the co-simulated runtime.
 
@@ -239,12 +240,14 @@ def run_scenario(
             build_engine_streams(prog, payload_bytes, streams, n,
                                  priority=priority, rank_data=rank_data),
             cluster=cluster, alpha=alpha, failures=failures,
-            controller=adapter, telemetry=telemetry)
+            controller=adapter, telemetry=telemetry,
+            verify_replans=verify_replans)
     else:
         report = simulate_program(
             prog, payload_bytes, cluster=cluster, alpha=alpha,
             failures=failures, rank_data=rank_data,
-            controller=adapter, telemetry=telemetry)
+            controller=adapter, telemetry=telemetry,
+            verify_replans=verify_replans)
     if finalize:
         cp.finalize(report.completion_time)
 

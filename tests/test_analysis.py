@@ -1,0 +1,431 @@
+"""Static-analysis subsystem: schedule verifier (dataflow + deadlock),
+mutation-rejection tests, determinism lint, and verified-replan wiring."""
+
+import dataclasses
+import pathlib
+import random
+import subprocess
+import sys
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis import (
+    DeadlockError,
+    DoubleReduceError,
+    ProgramError,
+    ResultError,
+    ResultRanksError,
+    ScheduleError,
+    Semantics,
+    StaleReadError,
+    StepLegalityError,
+    check_deadlock_free,
+    infer_semantics,
+    lint_paths,
+    lint_source,
+    verify_program,
+    verify_schedule,
+)
+from repro.analysis.corpus import builder_corpus
+from repro.core.allreduce import build_partial_all_reduce, build_r2ccl_all_reduce
+from repro.core.event_sim import EventSimulator
+from repro.core.recursive import build_recursive_all_reduce
+from repro.core.schedule import (
+    ChunkSchedule,
+    CollectiveProgram,
+    Segment,
+    Step,
+    build_ring_all_gather,
+    build_ring_all_reduce,
+    build_ring_broadcast,
+    build_ring_reduce_scatter,
+    build_tree_all_reduce,
+    build_tree_broadcast,
+    build_tree_reduce,
+    ring_program,
+)
+from repro.core.topology import ClusterTopology
+from repro.runtime.cosim import run_scenario
+from repro.runtime.scenarios import clean_nic_down, flap_storm
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# the verifier proves every builder clean
+# ---------------------------------------------------------------------------
+
+def test_builder_corpus_verifies_clean():
+    count = 0
+    for label, obj in builder_corpus(seed=3, max_n=7):
+        if isinstance(obj, CollectiveProgram):
+            reports = verify_program(obj)
+        else:
+            reports = [verify_schedule(obj)]
+        assert reports, label
+        for r in reports:
+            assert r.transfers > 0
+            assert r.semantics is not Semantics.OPAQUE, (
+                f"{label}: builder output must claim a semantics")
+        count += 1
+    assert count > 100
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 10), seed=st.integers(0, 999))
+def test_prop_ring_and_tree_builders_verify(n, seed):
+    rng = random.Random(seed)
+    order = list(range(n))
+    rng.shuffle(order)
+    root = order[rng.randrange(n)]
+    assert verify_schedule(
+        build_ring_all_reduce(order, n)).semantics is Semantics.ALL_REDUCE
+    assert verify_schedule(
+        build_ring_broadcast(order, n, root)).root == root
+    rep = verify_schedule(build_tree_reduce(order, n, root))
+    assert rep.semantics is Semantics.REDUCE and rep.result_ranks == (root,)
+    verify_schedule(build_tree_broadcast(order, n, root))
+    verify_schedule(build_tree_all_reduce(order, n, root=root))
+    verify_schedule(build_ring_reduce_scatter(order, n))
+    verify_schedule(build_ring_all_gather(order, n))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(3, 10), seed=st.integers(0, 999),
+       x=st.floats(0.05, 0.95))
+def test_prop_degraded_builders_verify(n, seed, x):
+    rng = random.Random(seed)
+    order = list(range(n))
+    rng.shuffle(order)
+    degraded = order[rng.randrange(n)]
+    healthy = [r for r in order if r != degraded]
+    verify_schedule(build_partial_all_reduce(healthy, degraded, n))
+    prog, _plan = build_r2ccl_all_reduce(order, degraded, x=x)
+    verify_program(prog)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999))
+def test_prop_recursive_builder_verifies(seed):
+    rng = random.Random(seed)
+    n = rng.randrange(3, 9)
+    bw = [rng.choice([1.0, 1.0, 0.7, 0.4, 0.0]) for _ in range(n)]
+    if sum(1 for b in bw if b > 0) < 2:
+        bw[0] = bw[1] = 1.0
+    prog, _levels = build_recursive_all_reduce(bw)
+    verify_program(prog)
+
+
+# ---------------------------------------------------------------------------
+# mutation tests: corrupt known-good schedules, expect typed rejections
+# ---------------------------------------------------------------------------
+
+def _swap_step(sched, i, **changes):
+    steps = list(sched.steps)
+    steps[i] = dataclasses.replace(steps[i], **changes)
+    return dataclasses.replace(sched, steps=steps)
+
+
+def test_mutation_swapped_perm_edge_rejected():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    st0 = sched.steps[0]
+    (s0, d0), (s1, d1), *rest = st0.perm
+    bad = _swap_step(sched, 0, perm=((s0, d1), (s1, d0), *rest))
+    with pytest.raises((DoubleReduceError, ResultError)) as ei:
+        verify_schedule(bad)
+    assert ei.value.where.schedule == sched.name
+
+
+def test_mutation_offbyone_chunk_rejected():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    st0 = sched.steps[0]
+    send = list(st0.send_chunk)
+    src = st0.perm[0][0]
+    send[src] = (send[src] + 1) % sched.num_chunks
+    bad = _swap_step(sched, 0, send_chunk=tuple(send))
+    with pytest.raises((DoubleReduceError, ResultError)):
+        verify_schedule(bad)
+
+
+def test_mutation_chunk_out_of_range_is_legality_error():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    send = list(sched.steps[0].send_chunk)
+    src = sched.steps[0].perm[0][0]
+    send[src] = sched.num_chunks          # one past the end
+    bad = _swap_step(sched, 0, send_chunk=tuple(send))
+    with pytest.raises(StepLegalityError) as ei:
+        verify_schedule(bad)
+    assert ei.value.where.step == 0 and ei.value.where.rank == src
+
+
+def test_mutation_dropped_accumulate_rejected():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    assert sched.steps[0].accumulate
+    bad = _swap_step(sched, 0, accumulate=False)
+    with pytest.raises(ResultError) as ei:
+        verify_schedule(bad)
+    assert "missing" in str(ei.value)
+
+
+def test_mutation_reordered_broadcast_steps_stale_read():
+    sched = build_ring_broadcast([0, 1, 2, 3], 4, root=0)
+    # forward a chunk before the round that delivers it has run
+    steps = list(sched.steps)
+    steps[0], steps[-1] = steps[-1], steps[0]
+    bad = dataclasses.replace(sched, steps=steps)
+    with pytest.raises(StaleReadError) as ei:
+        verify_schedule(bad)
+    assert ei.value.where.rank is not None
+
+
+def test_mutation_duplicate_source_is_legality_error():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    st0 = sched.steps[0]
+    (s0, d0), (_s1, d1), *rest = st0.perm
+    bad = _swap_step(sched, 0, perm=((s0, d0), (s0, d1), *rest))
+    with pytest.raises(StepLegalityError) as ei:
+        verify_schedule(bad)
+    assert "duplicate source" in str(ei.value)
+
+
+def test_mutation_double_reduce_detected_at_offending_step():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    # replay the first reduce round verbatim: every contribution it moved
+    # is accumulated a second time
+    steps = list(sched.steps)
+    steps.insert(1, steps[0])
+    bad = dataclasses.replace(sched, steps=steps)
+    with pytest.raises(DoubleReduceError) as ei:
+        verify_schedule(bad)
+    assert ei.value.where.step == 1
+
+
+def test_empty_result_ranks_rejected_for_semantic_names():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    bad = dataclasses.replace(sched, result_ranks=())
+    with pytest.raises(ResultRanksError):
+        verify_schedule(bad)
+    # but an opaque name with no claim passes legality-only verification
+    opaque = dataclasses.replace(bad, name="scratch")
+    rep = verify_schedule(opaque)
+    assert rep.semantics is Semantics.OPAQUE
+
+
+def test_result_rank_out_of_range_rejected():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    bad = dataclasses.replace(sched, result_ranks=(0, 1, 2, 7))
+    with pytest.raises(ResultRanksError) as ei:
+        verify_schedule(bad)
+    assert ei.value.where.rank == 7
+
+
+def test_program_fraction_error_is_typed():
+    prog = ring_program([0, 1, 2], 3)
+    bad = CollectiveProgram(prog.name, 3, [
+        Segment(0.7, prog.segments[0].schedule)])
+    with pytest.raises(ProgramError):
+        verify_program(bad)
+
+
+def test_all_builders_populate_result_ranks():
+    for label, obj in builder_corpus(seed=0, max_n=5):
+        scheds = ([s.schedule for s in obj.segments]
+                  if isinstance(obj, CollectiveProgram) else [obj])
+        for s in scheds:
+            assert s.result_ranks, f"{label}: {s.name} has empty result_ranks"
+
+
+# ---------------------------------------------------------------------------
+# deadlock analysis
+# ---------------------------------------------------------------------------
+
+def test_deadlock_free_counts_transfers():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    assert check_deadlock_free(sched) == sum(
+        len(s.perm) for s in sched.steps)
+
+
+def test_cross_segment_wait_cycle_is_deadlock():
+    a = build_ring_broadcast([0, 1, 2], 3, root=0)
+    b = build_ring_broadcast([2, 1, 0], 3, root=2)
+    prog = CollectiveProgram("scratch", 3,
+                             [Segment(0.5, a), Segment(0.5, b)])
+    # acyclic cross-segment barrier: fine
+    assert check_deadlock_free(prog, cross_segment_deps={1: [0]}) > 0
+    # mutual wait: every transfer of each segment waits on the other
+    with pytest.raises(DeadlockError) as ei:
+        check_deadlock_free(prog, cross_segment_deps={0: [1], 1: [0]})
+    assert len(ei.value.cycle) >= 2
+    segs = {c[0] for c in ei.value.cycle}
+    assert segs == {0, 1}
+
+
+def test_infer_semantics_builder_names():
+    assert infer_semantics("ring_ar[8]") is Semantics.ALL_REDUCE
+    assert infer_semantics("partial_ar[7]+bridge") is Semantics.ALL_REDUCE
+    assert infer_semantics("ring_rs[4]") is Semantics.REDUCE_SCATTER
+    assert infer_semantics("ring_ag[4]") is Semantics.ALL_GATHER
+    assert infer_semantics("ring_bcast[4]") is Semantics.BROADCAST
+    assert infer_semantics("tree_reduce[4]") is Semantics.REDUCE
+    assert infer_semantics("pp_chain[4]") is Semantics.BROADCAST
+    assert infer_semantics("residual[r2ccl_all_reduce]") is \
+        Semantics.ALL_REDUCE
+    assert infer_semantics("scratch") is Semantics.OPAQUE
+
+
+# ---------------------------------------------------------------------------
+# typed errors survive python -O (the old bare asserts did not)
+# ---------------------------------------------------------------------------
+
+def test_validate_raises_under_python_O():
+    code = (
+        "from repro.core.schedule import Step\n"
+        "from repro.analysis.errors import ScheduleError\n"
+        "bad = Step(((0, 1), (0, 2)), (0, -1, -1), (-1, 0, 0))\n"
+        "try:\n"
+        "    bad.validate(3, 1)\n"
+        "except ScheduleError:\n"
+        "    print('caught')\n"
+    )
+    out = subprocess.run(
+        [sys.executable, "-O", "-c", code],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr
+    assert out.stdout.strip() == "caught"
+
+
+# ---------------------------------------------------------------------------
+# determinism lint
+# ---------------------------------------------------------------------------
+
+def _rules(src):
+    return [f.rule for f in lint_source(src)]
+
+
+def test_lint_wall_clock():
+    assert "DET001" in _rules("import time\nnow = time.time()\n")
+    assert "DET001" in _rules(
+        "import datetime\nd = datetime.datetime.now()\n")
+    assert _rules("now = sim.clock()\n") == []
+
+
+def test_lint_unseeded_random():
+    assert "DET002" in _rules("import random\nx = random.random()\n")
+    assert "DET002" in _rules(
+        "import numpy as np\nx = np.random.uniform()\n")
+    assert "DET002" in _rules("import random\nr = random.Random()\n")
+    assert "DET002" in _rules(
+        "import numpy as np\nr = np.random.default_rng()\n")
+    # seeded constructions are deterministic
+    assert _rules("import random\nr = random.Random(7)\nx = r.random()\n") \
+        == []
+    assert _rules(
+        "import numpy as np\nr = np.random.default_rng(0)\n"
+        "x = r.uniform()\n") == []
+
+
+def test_lint_set_iteration():
+    assert "DET003" in _rules("s = {1, 2}\nfor x in s:\n    print(x)\n")
+    assert "DET003" in _rules(
+        "def f(active: set[int]):\n    return [x for x in active]\n")
+    assert "DET003" in _rules(
+        "class A:\n"
+        "    def __init__(self):\n"
+        "        self.live = set()\n"
+        "    def go(self):\n"
+        "        for x in self.live:\n"
+        "            print(x)\n")
+    # sorted() wrapping and set-comprehension results are order-safe
+    assert _rules("s = {1, 2}\nfor x in sorted(s):\n    print(x)\n") == []
+    assert _rules("s = {1, 2}\nt = {x + 1 for x in s}\n") == []
+    # rebinding to a non-set clears the inference
+    assert _rules("s = {1}\ns = [1]\nfor x in s:\n    print(x)\n") == []
+
+
+def test_lint_float_time_equality():
+    assert "DET004" in _rules("def f(now, t_end):\n    return now == t_end\n")
+    assert "DET004" in _rules("def f(now):\n    return now == 0.5\n")
+    # int sentinels and None guards are fine
+    assert _rules("def f(now):\n    return now == 0\n") == []
+    assert _rules("def f(now):\n    return now == None\n") == []
+    assert _rules("def f(count, total):\n    return count == total\n") == []
+
+
+def test_lint_frozen_mutation():
+    frozen = (
+        "import dataclasses\n"
+        "@dataclasses.dataclass(frozen=True)\n"
+        "class P:\n"
+        "    x: int\n"
+    )
+    assert "DET005" in _rules(
+        frozen + "def f(p: P):\n    p.x = 3\n")
+    assert "DET005" in _rules(
+        frozen + "def f(p):\n    object.__setattr__(p, 'x', 3)\n")
+    # __post_init__ is the blessed frozen-init escape hatch
+    assert _rules(
+        "import dataclasses\n"
+        "@dataclasses.dataclass(frozen=True)\n"
+        "class P:\n"
+        "    x: int\n"
+        "    def __post_init__(self):\n"
+        "        object.__setattr__(self, 'x', abs(self.x))\n") == []
+    # mutating a non-frozen instance is fine
+    assert _rules(
+        "import dataclasses\n"
+        "@dataclasses.dataclass\n"
+        "class Q:\n"
+        "    x: int\n"
+        "def f(q: Q):\n    q.x = 3\n") == []
+
+
+def test_lint_clean_on_core_and_runtime():
+    findings = lint_paths([REPO / "src/repro/core",
+                           REPO / "src/repro/runtime"])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# verified replans in the engine
+# ---------------------------------------------------------------------------
+
+def _cluster():
+    return ClusterTopology(num_nodes=4, devices_per_node=4)
+
+
+def test_verify_replans_passes_on_replanning_campaign():
+    scen = flap_storm(0.004, node=1, count=4)
+    base = run_scenario(scen, _cluster(), 4e8)
+    checked = run_scenario(scen, _cluster(), 4e8, verify_replans=True)
+    assert checked.report.replans > 0, "scenario must actually replan"
+    # verification is observation-only: identical timeline
+    assert checked.report.completion_time == base.report.completion_time
+    assert checked.report.replans == base.report.replans
+
+
+def test_verify_replans_passes_on_clean_nic_down():
+    scen = clean_nic_down(0.004, node=1)
+    rep = run_scenario(scen, _cluster(), 4e8, verify_replans=True)
+    assert rep.report.completion_time > 0
+
+
+def test_verify_replans_rejects_corrupt_program():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    bad = _swap_step(sched, 0, accumulate=False)
+    prog = CollectiveProgram("ring_all_reduce", 4, [Segment(1.0, bad)])
+    caps = [1e9] * 4
+    # legality-only validate() lets the semantic corruption through
+    EventSimulator(prog, 1e6, capacities=caps, g=2)
+    with pytest.raises(ResultError):
+        EventSimulator(prog, 1e6, capacities=caps, g=2, verify_replans=True)
+
+
+def test_analysis_cli_verify_and_lint():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "verify", "--max-n", "3"],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr
+    assert "clean" in out.stdout

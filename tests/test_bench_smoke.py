@@ -91,6 +91,11 @@ def test_runtime_bench_tiny_campaign_sweep(tmp_path):
     assert rows["mid_replan_retrans_bytes"] >= 0.0
     assert 0.0 < rows["mid_replan_residual_fraction"] <= 1.0
     assert rows["mid_replan_payload_max_error"] < 1e-9
+    # verified replans (static schedule verification on the hot swap path):
+    # acceptance is < 10% wall overhead, and verification must not perturb
+    # the simulated timeline at all
+    assert rows["mid_replan_verify_overhead"] < 0.10
+    assert rows["mid_replan_verified_equal"] == 1.0
     # contention rows: the multi-stream (TP+PP+DP) path runs in the tiny
     # tier too — fair sharing slows the contended DP sync (never speeds
     # it), every stream's payload is exact, a NIC-down costs at least as
