@@ -1,0 +1,132 @@
+"""Static-analysis conformance bench: cost analyzer vs event engine,
+alpha-beta planner vs static scorer, and failure-coverage survivability.
+
+Rows:
+
+  * ``static_cost_max_error``       — max relative error of the static cost
+    analyzer against the event engine's healthy completion over the builder
+    corpus (must stay under ``CORPUS_COST_TOLERANCE``);
+  * ``static_cost_exact_fraction``  — fraction of lockstep-uniform corpus
+    entries priced *bit-exactly* (must be 1.0);
+  * ``static_cost_uniform_fraction``— fraction of the corpus in the
+    bit-exact (single-segment lockstep) class;
+  * ``planner_drift_max/mean``      — relative gap between the alpha-beta
+    closed forms and the static price of the *built* program for the chosen
+    strategy, over a failure-state sweep;
+  * ``planner_static_agreement``    — fraction of sweep points where both
+    scorers pick the same strategy;
+  * ``coverage_survivable_fraction``       — multi-rail capacity model
+    (every rank keeps residual bandwidth; expect 1.0);
+  * ``coverage_single_rail_fraction``      — one rail per rank (any rail
+    failure strands its rank; expect 0.0).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import Reporter
+from repro.analysis.cost import (
+    CONFORMANCE_CAPACITY,
+    CONFORMANCE_PAYLOAD,
+    analyze_program,
+    as_program,
+)
+from repro.analysis.corpus import builder_corpus
+from repro.analysis.coverage import analyze_coverage
+from repro.core.event_sim import healthy_completion
+from repro.core.failures import FailureState
+from repro.core.planner import Collective, Planner
+from repro.core.topology import make_cluster
+
+
+def _conformance(rep: Reporter, max_n: int) -> None:
+    max_rel = 0.0
+    worst = "-"
+    exact = uniform = total = 0
+    for label, obj in builder_corpus(seed=0, max_n=max_n):
+        prog = as_program(obj)
+        caps = [CONFORMANCE_CAPACITY] * prog.n
+        r = analyze_program(prog, CONFORMANCE_PAYLOAD, capacities=caps)
+        engine = healthy_completion(prog, CONFORMANCE_PAYLOAD,
+                                    capacities=caps, g=2)
+        rel = abs(r.predicted_time - engine) / engine if engine > 0 else 0.0
+        if rel > max_rel:
+            max_rel, worst = rel, label
+        total += 1
+        if r.lockstep_uniform:
+            uniform += 1
+            exact += r.predicted_time == engine
+    rep.row("static_cost_max_error", max_rel, f"worst={worst}")
+    rep.row("static_cost_exact_fraction",
+            exact / uniform if uniform else 1.0,
+            f"{exact}/{uniform} lockstep-uniform entries bit-exact")
+    rep.row("static_cost_uniform_fraction",
+            uniform / total if total else 1.0,
+            f"{uniform}/{total} corpus entries in the bit-exact class")
+
+
+def _planner_drift(rep: Reporter, tiny: bool) -> None:
+    n, g = (3, 4) if tiny else (4, 8)
+    planner = Planner(make_cluster(n, g))
+    payloads = [float(1 << 20), float(1 << 26)] if tiny else \
+               [float(1 << 16), float(1 << 20), float(1 << 26), float(1 << 28)]
+    # failure sweep: healthy, single-NIC, concentrated, multi-node spectrum
+    sweeps: list[set[tuple[int, int]]] = [
+        set(),
+        {(0, 0)},
+        {(0, 0), (0, 1)},
+        {(0, 0), (1, 0), (1, 1)},
+    ]
+    drifts: list[float] = []
+    agree = points = 0
+    for failed in sweeps:
+        state = FailureState(failed_nics=set(failed))
+        for payload in payloads:
+            ab = planner.choose_strategy(Collective.ALL_REDUCE, payload, state)
+            st = planner.choose_strategy(Collective.ALL_REDUCE, payload,
+                                         state, score="static")
+            points += 1
+            agree += ab.strategy is st.strategy
+            if st.predicted_time > 0:
+                drifts.append(abs(ab.predicted_time - st.predicted_time)
+                              / st.predicted_time)
+    rep.row("planner_drift_max", max(drifts),
+            f"{points} sweep points ({n} nodes x {g} NICs)")
+    rep.row("planner_drift_mean", sum(drifts) / len(drifts))
+    rep.row("planner_static_agreement", agree / points,
+            "fraction of sweep points with identical strategy choice")
+
+
+def _coverage(rep: Reporter, max_n: int) -> None:
+    multi = multi_total = single = single_total = 0
+    for label, obj in builder_corpus(seed=0, max_n=max_n):
+        prog = as_program(obj)
+        caps = [CONFORMANCE_CAPACITY] * prog.n
+        cov2 = analyze_coverage(prog, CONFORMANCE_PAYLOAD, capacities=caps,
+                                g=2)
+        multi += sum(1 for e in cov2.entries if e.survivable)
+        multi_total += len(cov2.entries)
+        cov1 = analyze_coverage(prog, CONFORMANCE_PAYLOAD, capacities=caps,
+                                g=1)
+        single += sum(1 for e in cov1.entries
+                      if e.participates and e.survivable)
+        single_total += sum(1 for e in cov1.entries if e.participates)
+    rep.row("coverage_survivable_fraction",
+            multi / multi_total if multi_total else 1.0,
+            f"{multi_total} single-rail failures, 2 rails/rank")
+    rep.row("coverage_single_rail_fraction",
+            single / single_total if single_total else 0.0,
+            f"{single_total} participant failures, 1 rail/rank "
+            "(every one strands its rank)")
+
+
+def run(tiny: bool = False, seed: int = 0) -> None:
+    rep = Reporter("analysis_static")
+    max_n = 4 if tiny else 8
+    _conformance(rep, max_n)
+    _planner_drift(rep, tiny)
+    _coverage(rep, max_n)
+    rep.save()
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,8 @@ BENCHES = [
     ("dejavu", "bench_dejavu", "Fig.14 DejaVu comparison"),
     ("detection", "bench_detection", "Sec.4 detection + migration latency"),
     ("kernels", "bench_kernels", "Pallas kernels vs oracle"),
+    ("analysis", "bench_analysis",
+     "static cost/coverage conformance + planner drift"),
 ]
 
 

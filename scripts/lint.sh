@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Static-analysis gate: determinism lint + schedule verifier.
 #
-#   scripts/lint.sh              # lint src/repro/core + src/repro/runtime,
-#                                # then verify the full builder corpus
+#   scripts/lint.sh              # lint src/repro/{core,runtime,analysis,
+#                                # serving}, then verify the full builder
+#                                # corpus
 #   scripts/lint.sh <paths...>   # lint only the given files/dirs (the
 #                                # verifier still runs over the corpus)
 #

@@ -97,6 +97,21 @@ class ResultRanksError(ScheduleError):
     the rank space — the verifier would have nothing to prove."""
 
 
+class CoverageError(ScheduleError):
+    """A statically provable survivability hole: some single NIC/rail
+    failure leaves the schedule's transfer graph with no live path — a
+    participant rank would retain zero residual capacity, so the engine
+    would stall rather than complete (see :mod:`repro.analysis.coverage`).
+    """
+
+    def __init__(self, message: str, where: Provenance | None = None,
+                 *, node: int | None = None, rail: int | None = None):
+        #: the single failure (node, rail) that strands the schedule
+        self.node = node
+        self.rail = rail
+        super().__init__(message, where)
+
+
 class DeadlockError(ScheduleError):
     """The per-rank lockstep dependency graph has a cycle: some set of
     transfers each wait on one another and none can ever be released."""

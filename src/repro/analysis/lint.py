@@ -40,8 +40,12 @@ from typing import Iterable, Sequence
 
 __all__ = ["LintFinding", "lint_source", "lint_paths", "DEFAULT_LINT_TARGETS"]
 
-#: directories the CI determinism gate covers (relative to the repo root)
-DEFAULT_LINT_TARGETS = ("src/repro/core", "src/repro/runtime")
+#: directories the CI determinism gate covers (relative to the repo root):
+#: the simulator core and runtime, plus the analysis package itself (the
+#: static analyses must be as replay-deterministic as what they check) and
+#: the serving engine (its virtual-time request loop shares the contract)
+DEFAULT_LINT_TARGETS = ("src/repro/core", "src/repro/runtime",
+                        "src/repro/analysis", "src/repro/serving")
 
 _WALL_CLOCK_TIME_ATTRS = {"time", "monotonic", "perf_counter", "time_ns",
                           "monotonic_ns", "perf_counter_ns"}

@@ -445,9 +445,72 @@ def _full_set(contributors: Sequence[int], chunk: int) -> dict:
 # and re-raises with fresh provenance.  This makes hot-path re-verification
 # (every replan of a campaign builds structurally equal programs) cost a
 # tuple hash instead of a symbolic execution.
+#
+# Eviction is LRU: under cache pressure the least-recently-proved entry is
+# dropped (the earlier cap behavior — clearing the whole memo — silently
+# stopped caching the hot entries a long campaign re-proves every replan).
+# Counters are exposed (``memo_stats``) so tests can assert both that
+# eviction happened and that results never change under pressure.
 _MEMO_CAP = 4096
-_SCHED_MEMO: dict = {}
-_PROG_MEMO: dict = {}
+
+
+class _ProofMemo:
+    """Bounded LRU map of successful proofs, with observable counters."""
+
+    def __init__(self, cap: int = _MEMO_CAP):
+        self.cap = cap
+        self._entries: dict = {}          # insertion order = recency order
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key):
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        # refresh recency: move to the most-recently-used end
+        del self._entries[key]
+        self._entries[key] = entry
+        self.hits += 1
+        return entry
+
+    def put(self, key, value) -> None:
+        if key in self._entries:
+            del self._entries[key]
+        elif len(self._entries) >= self.cap > 0:
+            oldest = next(iter(self._entries))
+            del self._entries[oldest]
+            self.evictions += 1
+        self._entries[key] = value
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def stats(self) -> dict:
+        return {"size": len(self._entries), "cap": self.cap,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+_SCHED_MEMO = _ProofMemo()
+_PROG_MEMO = _ProofMemo()
+
+
+def memo_stats() -> dict:
+    """Counters of both proof memos (schedule- and program-level), for
+    tests and diagnostics: size/cap/hits/misses/evictions each."""
+    return {"schedule": _SCHED_MEMO.stats(), "program": _PROG_MEMO.stats()}
+
+
+def clear_memos() -> None:
+    """Drop all cached proofs and reset the counters (test isolation)."""
+    _SCHED_MEMO.clear()
+    _PROG_MEMO.clear()
 
 
 def _sched_key(sched: ChunkSchedule):
@@ -478,9 +541,7 @@ def verify_schedule(
         return cached
     rep = _verify_schedule_impl(sched, semantics=semantics, root=root,
                                 segment=segment, _structural=_structural)
-    if len(_SCHED_MEMO) >= _MEMO_CAP:
-        _SCHED_MEMO.clear()
-    _SCHED_MEMO[memo_key] = rep
+    _SCHED_MEMO.put(memo_key, rep)
     return rep
 
 
@@ -638,7 +699,5 @@ def verify_program(
             seg_sem = prog_sem
         reports.append(verify_schedule(
             seg.schedule, semantics=seg_sem, segment=i, _structural=False))
-    if len(_PROG_MEMO) >= _MEMO_CAP:
-        _PROG_MEMO.clear()
-    _PROG_MEMO[memo_key] = tuple(reports)
+    _PROG_MEMO.put(memo_key, tuple(reports))
     return reports

@@ -495,6 +495,12 @@ def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
     return rates
 
 
+#: conformance hook: the static cost analyzer (repro.analysis.cost) prices
+#: each lockstep round with the engine's own water-fill, through this public
+#: name, so the two rate models cannot drift
+fair_share = _fair_share
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -1599,6 +1605,24 @@ def simulate_schedule(
 
     prog = CollectiveProgram(sched.name, sched.n, [Segment(1.0, sched)])
     return simulate_program(prog, total_bytes, **kw)
+
+
+def healthy_completion(
+    prog: CollectiveProgram,
+    total_bytes: float,
+    *,
+    cluster: ClusterTopology | None = None,
+    capacities: Sequence[float] | None = None,
+    g: int = 8,
+    alpha: float = DEFAULT_ALPHA,
+) -> float:
+    """Failure-free completion time of ``prog`` — the conformance target of
+    the static cost analyzer (:mod:`repro.analysis.cost`): for uncontended
+    lockstep schedules ``analyze_program(...).predicted_time`` must equal
+    this bit-exactly, and within ``CORPUS_COST_TOLERANCE`` corpus-wide."""
+    return simulate_program(
+        prog, total_bytes, cluster=cluster, capacities=capacities, g=g,
+        alpha=alpha).completion_time
 
 
 def predict_ring_all_reduce(n: int, payload: float, bandwidth: float,

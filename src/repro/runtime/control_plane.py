@@ -156,6 +156,7 @@ class ControlPlane:
         state: FailureState | None = None,
         stream: str | None = None,
         trace: TraceLog | None = None,
+        score: str = "alpha_beta",
     ):
         self.cluster = cluster
         self.payload_bytes = float(payload_bytes)
@@ -185,6 +186,13 @@ class ControlPlane:
                 f"reprobe_base must be > 0 (seconds between probes), got "
                 f"{reprobe_base!r}")
         self.reprobe_base = float(reprobe_base)
+        #: planner cost model for every (re)plan: ``"alpha_beta"`` (default,
+        #: closed forms) or ``"static"`` (price built programs through the
+        #: static cost analyzer — opt-in, changes no default-path behavior)
+        if score not in ("alpha_beta", "static"):
+            raise ValueError(
+                f"score must be 'alpha_beta' or 'static', got {score!r}")
+        self.score = score
         self._reprobe_floor = REPROBE_PERIOD_MIN * self.reprobe_base / REPROBE_PERIOD
         self._reprobe_ceiling = REPROBE_PERIOD_MAX * self.reprobe_base / REPROBE_PERIOD
         self.failure_state = state if state is not None else FailureState()
@@ -297,7 +305,7 @@ class ControlPlane:
         try:
             plan = self.planner.choose_strategy(
                 self.collective, payload, self.failure_state,
-                g=self.cluster.devices_per_node)
+                g=self.cluster.devices_per_node, score=self.score)
             strat = {
                 Strategy.RING: "ring", Strategy.TREE: "ring",
                 Strategy.HOT_REPAIR: "hot_repair", Strategy.BALANCE: "balance",

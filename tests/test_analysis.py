@@ -1,7 +1,10 @@
 """Static-analysis subsystem: schedule verifier (dataflow + deadlock),
-mutation-rejection tests, determinism lint, and verified-replan wiring."""
+mutation-rejection tests, determinism lint, cost/coverage analyzers, and
+verified-replan wiring."""
 
 import dataclasses
+import json
+import math
 import pathlib
 import random
 import subprocess
@@ -11,6 +14,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.analysis import (
+    CORPUS_COST_TOLERANCE,
+    CoverageError,
     DeadlockError,
     DoubleReduceError,
     ProgramError,
@@ -20,6 +25,11 @@ from repro.analysis import (
     Semantics,
     StaleReadError,
     StepLegalityError,
+    analyze_coverage,
+    analyze_program,
+    analyze_schedule,
+    as_program,
+    check_coverage,
     check_deadlock_free,
     infer_semantics,
     lint_paths,
@@ -28,8 +38,9 @@ from repro.analysis import (
     verify_schedule,
 )
 from repro.analysis.corpus import builder_corpus
+from repro.analysis.cost import CONFORMANCE_CAPACITY, CONFORMANCE_PAYLOAD
 from repro.core.allreduce import build_partial_all_reduce, build_r2ccl_all_reduce
-from repro.core.event_sim import EventSimulator
+from repro.core.event_sim import EventSimulator, healthy_completion
 from repro.core.recursive import build_recursive_all_reduce
 from repro.core.schedule import (
     ChunkSchedule,
@@ -45,7 +56,7 @@ from repro.core.schedule import (
     build_tree_reduce,
     ring_program,
 )
-from repro.core.topology import ClusterTopology
+from repro.core.topology import ClusterTopology, make_cluster
 from repro.runtime.cosim import run_scenario
 from repro.runtime.scenarios import clean_nic_down, flap_storm
 
@@ -381,9 +392,14 @@ def test_lint_frozen_mutation():
         "def f(q: Q):\n    q.x = 3\n") == []
 
 
-def test_lint_clean_on_core_and_runtime():
+def test_lint_clean_on_all_default_targets():
+    # the gate covers core, runtime, analysis, AND serving (the analyzer
+    # must satisfy its own determinism contract; serving reads the host
+    # clock only through its injected seam)
     findings = lint_paths([REPO / "src/repro/core",
-                           REPO / "src/repro/runtime"])
+                           REPO / "src/repro/runtime",
+                           REPO / "src/repro/analysis",
+                           REPO / "src/repro/serving"])
     assert findings == [], "\n".join(str(f) for f in findings)
 
 
@@ -429,3 +445,274 @@ def test_analysis_cli_verify_and_lint():
         env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
     assert out.returncode == 0, out.stderr
     assert "clean" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# static cost analysis: engine conformance
+# ---------------------------------------------------------------------------
+
+def _uniform_caps(n):
+    return [CONFORMANCE_CAPACITY] * n
+
+
+def test_static_cost_bit_exact_on_lockstep_uniform_corpus():
+    """The tentpole guarantee: for every corpus entry in the uncontended
+    lockstep class, the static prediction equals the event engine's healthy
+    completion *bit-exactly*; everything else stays within the pinned
+    corpus tolerance."""
+    uniform = total = 0
+    for label, obj in builder_corpus(seed=0, max_n=6):
+        prog = as_program(obj)
+        caps = _uniform_caps(prog.n)
+        rep = analyze_program(prog, CONFORMANCE_PAYLOAD, capacities=caps)
+        engine = healthy_completion(prog, CONFORMANCE_PAYLOAD,
+                                    capacities=caps, g=2)
+        total += 1
+        if rep.lockstep_uniform:
+            uniform += 1
+            assert rep.predicted_time == engine, (
+                f"{label}: lockstep-uniform entry must be bit-exact "
+                f"(static={rep.predicted_time!r} engine={engine!r})")
+        rel = abs(rep.predicted_time - engine) / engine
+        assert rel <= CORPUS_COST_TOLERANCE, (
+            f"{label}: rel error {rel:.4g} exceeds {CORPUS_COST_TOLERANCE}")
+    assert uniform > 50, "the bit-exact class must dominate the corpus"
+    assert uniform < total, "multi-segment entries must also be exercised"
+
+
+def test_static_cost_bit_exact_under_heterogeneous_capacities():
+    # the guarantee is about lockstep uniformity, not uniform capacity:
+    # a ring on skewed-but-positive capacities loses uniformity (rounds
+    # skew), but the prediction must still track the engine within the
+    # corpus tolerance
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    caps = [25e9, 25e9, 12.5e9, 25e9]
+    rep = analyze_schedule(sched, CONFORMANCE_PAYLOAD, capacities=caps)
+    engine = healthy_completion(as_program(sched), CONFORMANCE_PAYLOAD,
+                                capacities=caps, g=2)
+    rel = abs(rep.predicted_time - engine) / engine
+    assert rel <= CORPUS_COST_TOLERANCE
+
+
+def test_cost_report_structure():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    rep = analyze_schedule(sched, CONFORMANCE_PAYLOAD,
+                           capacities=_uniform_caps(4))
+    assert rep.completes and rep.lockstep_uniform
+    assert rep.rounds == len(sched.steps)
+    assert rep.transfers == sum(len(s.perm) for s in sched.steps)
+    # a ring moves every byte it sends: per-link and per-rank loads agree
+    assert sum(rep.link_bytes.values()) == pytest.approx(
+        sum(rep.rank_tx_bytes))
+    assert sum(rep.rank_tx_bytes) == pytest.approx(sum(rep.rank_rx_bytes))
+    # hotspots ranked by utilization, densest first, all finite
+    utils = [h.utilization for h in rep.hotspots]
+    assert utils == sorted(utils, reverse=True)
+    assert all(0.0 < u <= 1.0 for u in utils)
+    # uniform ring: every direction equally hot
+    assert len(set(utils)) == 1
+    top = rep.top_links(3)
+    assert len(top) == 3
+    assert top[0].load_bytes >= top[-1].load_bytes
+    json.dumps(rep.to_dict())            # must be JSON-serializable
+
+
+def test_cost_prediction_infinite_without_live_path():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    rep = analyze_schedule(sched, CONFORMANCE_PAYLOAD,
+                           capacities=[25e9, 0.0, 25e9])
+    assert not rep.completes
+    assert rep.predicted_time == math.inf
+
+
+def test_cost_zero_payload_is_pure_latency():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    rep = analyze_schedule(sched, 0.0, capacities=_uniform_caps(4))
+    # every transfer hits the completion-epsilon branch: alpha per round
+    assert rep.predicted_time == pytest.approx(rep.alpha * rep.rounds)
+    engine = healthy_completion(as_program(sched), 0.0,
+                                capacities=_uniform_caps(4), g=2)
+    assert rep.predicted_time == engine
+
+
+def test_cost_topology_argument_contract():
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    with pytest.raises(ValueError):
+        analyze_schedule(sched, 1e6)                       # neither
+    with pytest.raises(ValueError):
+        analyze_schedule(sched, 1e6, capacities=[1e9] * 2)  # wrong arity
+    cluster = make_cluster(3, 4)
+    with pytest.raises(ValueError):
+        analyze_schedule(sched, 1e6, cluster=cluster,
+                         capacities=[1e9] * 3)             # both
+
+
+# ---------------------------------------------------------------------------
+# failure-coverage analysis
+# ---------------------------------------------------------------------------
+
+def test_coverage_multi_rail_survivable():
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    rep = check_coverage(sched, CONFORMANCE_PAYLOAD,
+                         capacities=_uniform_caps(4), g=2)
+    assert rep.survivable_fraction == 1.0
+    assert rep.findings == ()
+    assert len(rep.entries) == 4 * 2
+    # losing one of two rails halves the slowest rank's capacity
+    e = rep.entry(1, 0)
+    assert e.participates and e.survivable
+    assert e.slowdown > 1.0 and math.isfinite(e.degraded_time)
+    assert rep.worst_slowdown >= e.slowdown
+    json.dumps(rep.to_dict())
+
+
+def test_coverage_single_rail_pinned_is_non_survivable():
+    """Mutation guard: pin all transfers to one rail per rank (g=1) and the
+    analyzer must statically flag every participant failure as fatal, with
+    typed provenance."""
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    rep = analyze_coverage(sched, CONFORMANCE_PAYLOAD,
+                           capacities=_uniform_caps(4), g=1)
+    assert rep.survivable_fraction == 0.0
+    assert len(rep.findings) == 4
+    f = rep.findings[0]
+    assert isinstance(f, CoverageError)
+    assert isinstance(f, ScheduleError)          # typed like the verifier's
+    assert f.node == 0 and f.rail == 0
+    assert f.where is not None and f.where.schedule == sched.name
+    assert rep.entry(0, 0).stranded_ranks == (0,)
+    assert rep.entry(0, 0).degraded_time == math.inf
+    with pytest.raises(CoverageError):
+        check_coverage(sched, CONFORMANCE_PAYLOAD,
+                       capacities=_uniform_caps(4), g=1)
+
+
+def test_coverage_non_participant_failure_is_survivable():
+    # rank 3 carries no traffic in a 3-rank ring embedded in 4 capacities
+    sched = build_ring_all_reduce([0, 1, 2], 3)
+    prog = CollectiveProgram(sched.name, 4, [Segment(1.0, sched)])
+    rep = analyze_coverage(prog, CONFORMANCE_PAYLOAD,
+                           capacities=_uniform_caps(4), g=1)
+    e = rep.entry(3, 0)
+    assert not e.participates and e.survivable
+    assert e.slowdown == 1.0
+    # the participants are still flagged
+    assert not rep.entry(0, 0).survivable
+
+
+def test_coverage_matches_event_engine_on_degraded_capacity():
+    # the static degraded bound under a half-capacity rank conforms to the
+    # engine run on the same residual capacities
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    rep = analyze_coverage(sched, CONFORMANCE_PAYLOAD,
+                           capacities=_uniform_caps(4), g=2)
+    e = rep.entry(2, 1)
+    residual = _uniform_caps(4)
+    residual[2] /= 2
+    engine = healthy_completion(as_program(sched), CONFORMANCE_PAYLOAD,
+                                capacities=residual, g=2)
+    rel = abs(e.degraded_time - engine) / engine
+    assert rel <= CORPUS_COST_TOLERANCE
+
+
+# ---------------------------------------------------------------------------
+# proof-memo LRU: cache pressure never changes verification results
+# ---------------------------------------------------------------------------
+
+def _report_key(r):
+    return (r.schedule, r.semantics, r.contributors, r.result_ranks,
+            r.steps, r.transfers, r.root)
+
+
+def test_proof_memo_pressure_never_changes_results(monkeypatch):
+    from repro.analysis import verify as V
+
+    entries = list(builder_corpus(seed=2, max_n=5))
+
+    def run_all():
+        out = {}
+        for label, obj in entries:
+            if isinstance(obj, CollectiveProgram):
+                reps = verify_program(obj)
+            else:
+                reps = [verify_schedule(obj)]
+            out[label] = tuple(_report_key(r) for r in reps)
+        return out
+
+    V.clear_memos()
+    baseline = run_all()
+
+    # tiny caps: every put evicts something, both passes thrash
+    monkeypatch.setattr(V, "_SCHED_MEMO", V._ProofMemo(cap=2))
+    monkeypatch.setattr(V, "_PROG_MEMO", V._ProofMemo(cap=2))
+    first = run_all()
+    second = run_all()
+    stats = V.memo_stats()
+    assert stats["schedule"]["evictions"] > 0, (
+        "cap-2 memo over the corpus must actually evict")
+    assert stats["schedule"]["size"] <= 2
+    assert first == baseline
+    assert second == baseline
+
+
+def test_proof_memo_lru_recency_and_counters():
+    from repro.analysis.verify import _ProofMemo
+
+    memo = _ProofMemo(cap=2)
+    memo.put("a", 1)
+    memo.put("b", 2)
+    assert memo.get("a") == 1           # refreshes "a" to most-recent
+    memo.put("c", 3)                    # evicts "b", the LRU entry
+    assert memo.get("b") is None
+    assert memo.get("a") == 1 and memo.get("c") == 3
+    s = memo.stats()
+    assert s["evictions"] == 1 and s["size"] == 2 and s["cap"] == 2
+    assert s["hits"] == 3 and s["misses"] == 1
+    memo.clear()
+    assert len(memo) == 0 and memo.stats()["hits"] == 0
+
+
+def test_memoized_verify_hits_on_repeat():
+    from repro.analysis import verify as V
+
+    V.clear_memos()
+    sched = build_ring_all_reduce([0, 1, 2, 3], 4)
+    verify_schedule(sched)
+    misses = V.memo_stats()["schedule"]["misses"]
+    verify_schedule(sched)
+    after = V.memo_stats()["schedule"]
+    assert after["hits"] >= 1
+    assert after["misses"] == misses    # second call never re-proves
+
+
+# ---------------------------------------------------------------------------
+# cost / coverage CLI (the CI artifact path)
+# ---------------------------------------------------------------------------
+
+def _run_cli(*argv, cwd=None):
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *argv],
+        capture_output=True, text=True, cwd=cwd,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"})
+
+
+def test_analysis_cli_cost_corpus(tmp_path):
+    out_path = tmp_path / "cost.json"
+    out = _run_cli("cost", "--corpus", "--max-n", "3",
+                   "--out", str(out_path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "bit-exact" in out.stdout
+    doc = json.loads(out_path.read_text())
+    assert doc["conformance_ran"] is True
+    assert doc["max_rel_error"] <= doc["tolerance"]
+    assert doc["bit_exact"] == doc["lockstep_uniform"]
+    assert len(doc["entries"]) == doc["entries_total"] > 0
+
+
+def test_analysis_cli_coverage(tmp_path):
+    out_path = tmp_path / "coverage.json"
+    out = _run_cli("coverage", "--max-n", "3", "--out", str(out_path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    doc = json.loads(out_path.read_text())
+    assert doc["survivable_fraction"] == 1.0
+    assert doc["failure_cells"] > 0

@@ -122,6 +122,25 @@ def test_runtime_bench_tiny_campaign_sweep(tmp_path):
         assert json.load(f)["traceEvents"]
 
 
+def test_analysis_bench_tiny():
+    """Static cost/coverage conformance bench: lockstep-uniform corpus
+    entries priced bit-exactly, corpus error under the pinned tolerance,
+    and the survivability fractions at their provable extremes."""
+    from repro.analysis.cost import CORPUS_COST_TOLERANCE
+
+    bench_main(["--only", "analysis", "--tiny"])
+    rows = _rows("analysis_static")
+    assert rows["static_cost_exact_fraction"] == 1.0
+    assert rows["static_cost_max_error"] <= CORPUS_COST_TOLERANCE
+    assert 0.5 < rows["static_cost_uniform_fraction"] <= 1.0
+    assert rows["planner_drift_max"] >= rows["planner_drift_mean"] >= 0.0
+    assert 0.0 <= rows["planner_static_agreement"] <= 1.0
+    # 2 rails/rank: every single-rail failure survivable; 1 rail/rank:
+    # every participant failure provably fatal
+    assert rows["coverage_survivable_fraction"] == 1.0
+    assert rows["coverage_single_rail_fraction"] == 0.0
+
+
 def test_engine_perf_bench_tiny():
     """Event-engine throughput bench: the telemetry acceptance row (wall
     overhead with the monitor attached at its 64-sample budget) must stay

@@ -78,3 +78,119 @@ def test_comm_config_kwargs():
     kw = c.kwargs()
     assert kw["mode"] == "r2ccl" and kw["degraded"] == 3
     assert kw["bandwidths"] is None
+
+
+# ---------------------------------------------------------------------------
+# alpha-beta closed-form edge cases
+# ---------------------------------------------------------------------------
+
+def test_ring_time_hetero_degenerate_bandwidths():
+    from repro.core.planner import ring_time_hetero
+
+    # any dead node stalls the ring; all-dead likewise
+    assert ring_time_hetero(1e6, [1e9, 0.0, 1e9], 8, 2e-6) == float("inf")
+    assert ring_time_hetero(1e6, [0.0, 0.0], 8, 2e-6) == float("inf")
+    # healthy vector is finite and monotone in the slowest node
+    fast = ring_time_hetero(1e6, [2e9, 2e9], 8, 2e-6)
+    slow = ring_time_hetero(1e6, [2e9, 1e9], 8, 2e-6)
+    assert 0 < fast < slow
+
+
+def test_tree_time_degenerate_bandwidths():
+    from repro.core.planner import tree_time
+
+    # a tree routes around dead nodes: priced at the slowest *live* node
+    assert tree_time(1e6, [1e9, 0.0, 1e9], 8, 2e-6) == \
+        tree_time(1e6, [1e9, 1e9, 1e9], 8, 2e-6)
+    # every node dead: no tree can move data
+    assert tree_time(1e6, [0.0, 0.0, 0.0], 8, 2e-6) == float("inf")
+
+
+def test_single_node_group_times_are_latency_only():
+    from repro.core.planner import ring_time_hetero, tree_time
+
+    alpha = 2e-6
+    # n=1, g=1: a "ring" of one device — zero steps, zero time
+    assert ring_time_hetero(0.0, [1e9], 1, alpha) == 0.0
+    t = tree_time(0.0, [1e9], 1, alpha)
+    assert t == pytest.approx(2 * alpha)       # depth clamps at 1
+
+
+def test_zero_payload_collectives_price_latency_term():
+    from repro.core.planner import ring_time_hetero, tree_time
+
+    alpha = 2e-6
+    n, g = 4, 8
+    assert ring_time_hetero(0.0, [1e9] * n, g, alpha) == \
+        pytest.approx(2 * (n * g - 1) * alpha)
+    assert tree_time(0.0, [1e9] * n, g, alpha) > 0
+    # the planner still returns a finite plan for a zero-byte collective
+    plan = Planner(make_cluster(n, g)).choose_strategy(
+        Collective.ALL_REDUCE, 0.0, FailureState())
+    assert plan.strategy in (Strategy.TREE, Strategy.RING)
+    assert 0 < plan.predicted_time < float("inf")
+
+
+# ---------------------------------------------------------------------------
+# score="static": price built programs with the cost analyzer
+# ---------------------------------------------------------------------------
+
+def test_invalid_score_rejected(planner):
+    with pytest.raises(ValueError, match="score"):
+        planner.choose_strategy(Collective.ALL_REDUCE, 1 << 20,
+                                FailureState(), score="event")
+
+
+def test_static_score_is_opt_in(planner):
+    # default path must be byte-identical to the original alpha-beta plan
+    st = _state(single_nic_failure(2, 3))
+    explicit = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st,
+                                       score="alpha_beta")
+    default = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st)
+    assert default == explicit
+
+
+def test_static_score_healthy_ring():
+    planner = Planner(make_cluster(4, 8))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 28,
+                                   FailureState(), score="static")
+    assert plan.strategy is Strategy.RING
+    assert 0 < plan.predicted_time < float("inf")
+    assert "static" in plan.notes
+
+
+def test_static_score_prices_real_program():
+    # the static plan's time is the cost analyzer's price of the built
+    # ring program over the healthy node bandwidths — check it end-to-end
+    from repro.analysis.cost import analyze_program
+    from repro.core.schedule import ring_program
+
+    cluster = make_cluster(4, 8)
+    planner = Planner(cluster)
+    payload = float(1 << 28)
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, payload,
+                                   FailureState(), score="static")
+    rep = analyze_program(ring_program(list(range(4)), 4), payload,
+                          capacities=cluster.bandwidths(),
+                          alpha=planner.alpha)
+    assert plan.predicted_time == rep.predicted_time
+
+
+def test_static_score_single_failure_candidates():
+    planner = Planner(make_cluster(4, 8))
+    st = _state(single_nic_failure(2, 3))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 30, st,
+                                   score="static")
+    assert plan.strategy in (Strategy.BALANCE, Strategy.R2CCL_ALL_REDUCE,
+                             Strategy.RECURSIVE)
+    assert plan.degraded_node == 2
+    assert 0 < plan.predicted_time < float("inf")
+    assert plan.bandwidths[2] < plan.bandwidths[0]
+
+
+def test_static_score_small_payload_under_failure_uses_balance():
+    planner = Planner(make_cluster(4, 8))
+    st = _state(single_nic_failure(1, 0))
+    plan = planner.choose_strategy(Collective.ALL_REDUCE, 1 << 12, st,
+                                   score="static")
+    assert plan.strategy is Strategy.BALANCE

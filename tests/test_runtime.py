@@ -249,6 +249,34 @@ def test_reprobe_cadence_adapts_to_flap_history():
     assert cp.reprobe_period((2, 1), now=4.01) == pytest.approx(flappy_period)
 
 
+def test_control_plane_static_score_threads_to_replans():
+    """``ControlPlane(score="static")`` prices replan candidates with the
+    static cost analyzer (built programs, not alpha-beta closed forms) —
+    and the mode is strictly opt-in."""
+    from repro.core.failures import link_flap
+
+    cluster = make_cluster(4, 4, nic_bandwidth=NIC_BW)
+    cp = ControlPlane(cluster, payload_bytes=PAYLOAD, flap_window=10.0,
+                      score="static")
+    seen_scores = []
+    orig = cp.planner.choose_strategy
+
+    def spy(*args, **kw):
+        seen_scores.append(kw.get("score"))
+        return orig(*args, **kw)
+
+    cp.planner.choose_strategy = spy
+    outs = [cp.handle_failure(link_flap(1, 0, t, 0.01), now=t)
+            for t in (0.0, 1.0, 2.0)]
+    assert outs[-1].decision.replan is not None, (
+        "flap storm past the threshold must replan")
+    assert seen_scores and set(seen_scores) == {"static"}
+    assert outs[-1].entry.strategy in (
+        "balance", "r2ccl_all_reduce", "recursive")
+    with pytest.raises(ValueError, match="score"):
+        ControlPlane(cluster, score="event")
+
+
 def test_recovery_transition_back_to_healthy(cluster, t_h):
     """A single flap that recovers re-probes healthy: HEALTHY terminal."""
     sc = parse_campaign("one_flap", "flap node=1 rail=0 at=0.3 down=0.2",
