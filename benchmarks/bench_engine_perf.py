@@ -8,6 +8,17 @@ overhead < 10% on the tiny tier.  All timings are min-of-repeats — the
 minimum is the noise-robust estimator for a deterministic workload, and
 the overhead *ratio* of two minima is stable where a ratio of means
 wobbles with scheduler jitter.
+
+The **scale sweep** rows (``sweep_<kind><ranks>_*``) measure the
+incremental vectorized water-fill at fleet scale — 256 → 1024 → 4096 →
+10240 ranks — on a binomial-tree AllReduce (~2(n-1) transfers with
+matching rounds up to n/2 flows wide: the fill-stressing shape that stays
+affordable at 10k ranks, where a chunked ring would need ~2·10^8 transfer
+objects) plus a chunked 256-rank ring (event-count stress: ~260k events).
+Rows with a reference arm also report ``speedup_vs_reference`` against
+``fill="reference"`` and assert the two timelines agree; the nightly CI
+gate (``scripts/check_engine_perf.py``) replays the tiny sweep and fails
+on >30% events/sec regression vs the committed JSON.
 """
 
 from __future__ import annotations
@@ -16,7 +27,7 @@ import time
 
 from repro.core.comm_sim import NIC_200G
 from repro.core.event_sim import simulate_program
-from repro.core.schedule import ring_program
+from repro.core.schedule import ring_program, tree_program
 from repro.core.telemetry import Telemetry
 from repro.core.topology import make_cluster
 from repro.runtime import (
@@ -27,6 +38,48 @@ from repro.runtime import (
 )
 
 from .common import Reporter
+
+#: scale-sweep workloads: (kind, rank counts, full-tier reference-arm cap).
+#: The reference fill is O(rounds · flows) *per epoch* — ~4.6 s for one
+#: tree pass at 4096 ranks and far worse on chunked rings — so the slow
+#: arm only runs where it finishes in seconds (tiny tier caps it at 1024,
+#: the acceptance row's scale).
+SWEEP_TREE_RANKS = (256, 1024, 4096, 10240)
+SWEEP_TREE_RANKS_TINY = (256, 1024)
+SWEEP_REFERENCE_MAX = 4096
+SWEEP_REFERENCE_MAX_TINY = 1024
+
+
+def scale_sweep(tiny: bool = False) -> list[dict]:
+    """Run the fleet-scale sweep; returns one dict per row (shared with
+    the nightly regression gate in ``scripts/check_engine_perf.py``)."""
+    ref_max = SWEEP_REFERENCE_MAX_TINY if tiny else SWEEP_REFERENCE_MAX
+    jobs = [("tree", n, tree_program)
+            for n in (SWEEP_TREE_RANKS_TINY if tiny else SWEEP_TREE_RANKS)]
+    jobs.append(("ring", 256, ring_program))
+    rows = []
+    for kind, n, build in jobs:
+        prog = build(list(range(n)), n)
+        caps = [NIC_200G] * n
+        repeats = 2 if n <= 1024 else 1
+        wall, rep = _min_time(
+            lambda: simulate_program(prog, 1e9, capacities=caps, g=8),
+            repeats)
+        row = {"kind": kind, "ranks": n, "events": rep.events, "wall": wall,
+               "events_per_sec": rep.events / wall}
+        # chunked rings make the reference arm pathological (each of ~2n
+        # epochs refills an n-flow matching at O(n^2) dict work), so only
+        # tree rows carry the slow arm + speedup metric
+        if kind == "tree" and n <= ref_max:
+            wall_ref, rep_ref = _min_time(
+                lambda: simulate_program(prog, 1e9, capacities=caps, g=8,
+                                         fill="reference"), 1)
+            assert rep_ref.completion_time == rep.completion_time
+            assert rep_ref.events == rep.events
+            row["reference_wall"] = wall_ref
+            row["speedup"] = wall_ref / wall
+        rows.append(row)
+    return rows
 
 
 def _min_time(fn, repeats: int):
@@ -160,6 +213,16 @@ def run(tiny: bool = False, seed: int = 0) -> None:
     r.row("telemetry_overhead", overhead,
           f"loaded-engine wall {w_on * 1e3:.2f}ms on vs "
           f"{w_off * 1e3:.2f}ms off; acceptance < 0.10")
+
+    # -- fleet-scale sweep: incremental vectorized fill at 256..10240 ranks --
+    for row in scale_sweep(tiny=tiny):
+        tag = f"sweep_{row['kind']}{row['ranks']}"
+        r.row(f"{tag}_events_per_sec", row["events_per_sec"],
+              f"{row['events']} events in {row['wall'] * 1e3:.1f}ms wall")
+        if "speedup" in row:
+            r.row(f"{tag}_speedup_vs_reference", row["speedup"],
+                  f"reference fill {row['reference_wall'] * 1e3:.1f}ms; "
+                  "identical timeline; acceptance >= 5x at 1024")
     r.save()
 
 

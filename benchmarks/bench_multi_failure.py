@@ -104,6 +104,23 @@ def run(trials: int = 50, mode: str = "alpha_beta", tiny: bool = False,
     r.row("sublinear_ratio", means[-1] / max(means[0] * scale, 1e-12),
           "<1 means sub-linear")
 
+    if mode == "event":
+        # Fleet-scale row the per-epoch global fill could not afford: 1024
+        # GPUs (128 servers x 8 NICs), full event-mode Monte Carlo through
+        # the incremental vectorized water-fill.  Few trials — the point is
+        # that the scale is now *reachable*, and each trial is exact.
+        big_servers, big_devices = 128, 8
+        big_trials = 2 if tiny else 3
+        big = make_cluster(big_servers, big_devices, nic_bandwidth=NIC_200G)
+        big_job = TrainJob(params=7e9, dp=big_servers * 2,
+                           tp=big_devices // 2, pp=1, global_batch=1024,
+                           flops_per_chip=A100_BF16_FLOPS)
+        mc = monte_carlo_multi_failure(big_job, big, 2, trials=big_trials,
+                                       strategy="auto", mode=mode, seed=seed)
+        r.row("event_1024gpu_k2_mean_overhead", mc["mean"],
+              f"{big_servers}x{big_devices} cluster, {big_trials} trials, "
+              f"p95={mc['p95']:.3%}; vectorized-fill tier")
+
     _event_scenarios(r, servers=2 if tiny else 8, devices=4 if tiny else 8,
                      payload=2e6 if tiny else 100e6, seed=seed)
     r.save()

@@ -22,7 +22,7 @@ BENCHES = [
     ("multi_failure", "bench_multi_failure", "Fig.10 Monte Carlo k failures"),
     ("runtime", "bench_runtime", "Sec.4-6 closed-loop recovery stage breakdown"),
     ("engine_perf", "bench_engine_perf",
-     "event-engine throughput + telemetry overhead"),
+     "event-engine throughput, telemetry overhead + 10k-rank fill sweep"),
     ("inference", "bench_inference", "Fig.11-13 TTFT/TPOT under failure"),
     ("dejavu", "bench_dejavu", "Fig.14 DejaVu comparison"),
     ("detection", "bench_detection", "Sec.4 detection + migration latency"),

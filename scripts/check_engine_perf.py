@@ -1,0 +1,79 @@
+#!/usr/bin/env python
+"""Nightly event-engine perf regression gate.
+
+Replays the tiny-tier scale sweep (``benchmarks.bench_engine_perf.
+scale_sweep``) and compares each row's events/sec against the committed
+baseline in ``experiments/bench/BENCH_event_engine.json``.  Fails (exit 1)
+when any sweep row regresses by more than ``REGRESSION_TOLERANCE`` —
+wall-clock noise on shared CI runners stays well inside 30%, a lost
+vectorized/incremental code path does not.
+
+Rows present in the fresh sweep but missing from the committed JSON are
+reported as NEW and do not fail the gate (they appear when the sweep
+grows; regenerate the baseline with
+``PYTHONPATH=src python -m benchmarks.run --only engine_perf``).
+
+Absolute events/sec moves with host speed; the 30% window absorbs the
+usual runner-to-runner spread, and ``ENGINE_PERF_TOLERANCE`` overrides it
+(e.g. ``ENGINE_PERF_TOLERANCE=0.5``) for unusually slow hardware.
+
+Usage: PYTHONPATH=src python scripts/check_engine_perf.py [baseline.json]
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+sys.path.insert(0, str(REPO / "src"))
+
+REGRESSION_TOLERANCE = float(os.environ.get("ENGINE_PERF_TOLERANCE", 0.30))
+DEFAULT_BASELINE = REPO / "experiments" / "bench" / "BENCH_event_engine.json"
+
+
+def main(argv: list[str]) -> int:
+    baseline_path = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        DEFAULT_BASELINE
+    committed = json.loads(baseline_path.read_text())
+    baseline = {name: value for name, value, _ in committed["rows"]
+                if name.startswith("sweep_")
+                and name.endswith("_events_per_sec")}
+    if not baseline:
+        print(f"ERROR: no sweep_*_events_per_sec rows in {baseline_path}; "
+              "regenerate the bench JSON first")
+        return 1
+
+    from benchmarks.bench_engine_perf import scale_sweep
+
+    failures = []
+    print(f"{'row':<28} {'baseline':>12} {'fresh':>12} {'ratio':>7}")
+    for row in scale_sweep(tiny=True):
+        name = f"sweep_{row['kind']}{row['ranks']}_events_per_sec"
+        fresh = row["events_per_sec"]
+        base = baseline.get(name)
+        if base is None:
+            print(f"{name:<28} {'NEW':>12} {fresh:>12.0f}      -")
+            continue
+        ratio = fresh / base
+        verdict = ""
+        if fresh < (1.0 - REGRESSION_TOLERANCE) * base:
+            failures.append((name, base, fresh))
+            verdict = "  REGRESSION"
+        print(f"{name:<28} {base:>12.0f} {fresh:>12.0f} {ratio:>6.2f}x"
+              f"{verdict}")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} sweep row(s) regressed more than "
+              f"{REGRESSION_TOLERANCE:.0%} vs {baseline_path}")
+        return 1
+    print(f"\nOK: all sweep rows within {REGRESSION_TOLERANCE:.0%} of the "
+          "committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

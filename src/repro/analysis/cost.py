@@ -5,7 +5,9 @@ verifier (:mod:`repro.analysis.verify`) walks, using the event engine's own
 arithmetic so the two cannot drift:
 
 * every round's transfers are rated by the engine's weighted max-min
-  water-fill (:func:`repro.core.event_sim.fair_share` — the same function,
+  water-fill (:func:`repro.core.event_sim.fair_share_fast` — the engine's
+  vectorized kernel, pinned bit-identical to the exported reference
+  ``fair_share`` by the property suite in ``tests/test_fill_equiv.py`` —
   called on the same flow ordering);
 * a transfer's finish is ``(start + alpha) + size / rate`` — the same float
   operations, in the same order, the engine's event loop performs (release,
@@ -37,7 +39,7 @@ import dataclasses
 import math
 from typing import Sequence
 
-from repro.core.event_sim import fair_share
+from repro.core.event_sim import fair_share_fast
 from repro.core.schedule import ChunkSchedule, CollectiveProgram, Segment
 from repro.core.topology import ClusterTopology, DEFAULT_ALPHA
 
@@ -248,7 +250,7 @@ def _walk(
             seg_live = True
             rounds += 1
             transfers += len(flows)
-            rates = fair_share(flows, cap)
+            rates = fair_share_fast(flows, cap)
             begins: list[float] = []
             finish: dict[int, float] = {}
             for f in flows:

@@ -84,6 +84,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import math
+import sys
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -103,6 +104,23 @@ from .topology import ClusterTopology, DEFAULT_ALPHA
 DEFAULT_REPAIR_LATENCY = 1.5e-3
 
 _BLOCKED, _LATENT, _ACTIVE, _DONE, _CANCELLED = range(5)
+
+_FLOAT_EPS = sys.float_info.epsilon
+
+
+def _time_tol(now: float) -> float:
+    """Same-timestamp bucket tolerance at clock value ``now``.
+
+    Co-timestamped events reach the queue through different float
+    expressions (``(t + a) + b`` vs ``t + (a + b)``) and so land a few
+    ulps apart.  One ulp grows with the clock — at ``now`` ≈ 16384 s it
+    is ~3.6e-12, far above a fixed 1e-15 — so the tolerance must scale
+    with ``now`` or long campaigns silently split one logical bucket
+    across loop iterations.  Four ulps of slack covers the association
+    noise while staying ~3 orders of magnitude below ``alpha``, the
+    smallest genuine gap between distinct rounds.
+    """
+    return 1e-15 + 4.0 * _FLOAT_EPS * now
 
 
 class EventSimError(RuntimeError):
@@ -127,7 +145,6 @@ class _Transfer:
     recv_chunk: int
     deps: int = 0                # unfinished prerequisite transfers
     state: int = _BLOCKED
-    remaining: float = 0.0
     payload: np.ndarray | None = None
     dependents: list[int] = dataclasses.field(default_factory=list)
     stream: int = 0              # owning stream index
@@ -425,10 +442,17 @@ class _Capacities:
         return max((sev for r, sev in self._lost[rank].values() if r == rail),
                    default=0.0)
 
-    def recover(self, rank: int, failure: Failure) -> None:
+    def recover(self, rank: int, failure: Failure) -> list[int]:
+        """Lift ``failure``'s degradation.  Returns every rank whose
+        capacity this changed — the failed rank plus any rank carrying a
+        control-plane factor keyed by the failure — so the engine can
+        invalidate exactly those cached capacities."""
+        affected = [rank]
         self._lost[rank].pop(failure, None)
-        for scales in self._scale:
-            scales.pop(failure, None)
+        for r, scales in enumerate(self._scale):
+            if scales.pop(failure, None) is not None and r != rank:
+                affected.append(r)
+        return affected
 
     def scale(self, rank: int, failure: Failure, factor: float) -> None:
         """Install a residual-capacity factor tied to ``failure``'s lifetime."""
@@ -501,6 +525,107 @@ def _fair_share(flows: Sequence[_Transfer], cap) -> dict[int, float]:
 fair_share = _fair_share
 
 
+def _fill_vec(src: np.ndarray, dst: np.ndarray, w: np.ndarray,
+              avail_tx: np.ndarray, avail_rx: np.ndarray,
+              n: int) -> np.ndarray:
+    """Vectorized progressive fill, bit-identical to :func:`_fair_share`.
+
+    ``src``/``dst``/``w`` are per-flow arrays in the reference's flow
+    order; ``avail_tx``/``avail_rx`` are length-``n`` per-rank capacity
+    vectors (mutated in place, exactly as the reference drains its
+    ``avail`` dict).  Bit-identity holds because every float operation of
+    the reference is replayed in the same per-key order:
+
+    * ``np.bincount(..., weights=...)`` accumulates sequentially in array
+      order — the same adds, in the same order, as the reference's
+      per-flow dict sums (and a single-flow endpoint's ``0.0 + w == w``).
+    * The bottleneck tie-break replays dict insertion order: endpoint
+      first-occurrence positions in the interleaved (tx of flow 0, rx of
+      flow 0, tx of flow 1, ...) stream, minimized over equal-ratio
+      candidates.
+    * Freezing decrements ``avail`` with unbuffered ``np.subtract.at`` —
+      tx and rx live in disjoint arrays, so splitting the reference's
+      interleaved decrements into two sequential passes preserves the
+      per-key operation order.
+    * When no endpoint carries more than one remaining flow (every
+      lockstep matching round), the loop collapses to one vectorized
+      expression: each flow's rate is ``w * max(0, min(tx, rx ratio))``
+      — the freeze its own bottleneck endpoint would have applied, and
+      no other flow's freeze can touch its endpoints.
+    """
+    F = src.shape[0]
+    rates = np.zeros(F)
+    alive = np.ones(F, dtype=bool)
+    while True:
+        idx = np.flatnonzero(alive)
+        if idx.size == 0:
+            break
+        s, d, ww = src[idx], dst[idx], w[idx]
+        cnt_tx = np.bincount(s, minlength=n)
+        cnt_rx = np.bincount(d, minlength=n)
+        if cnt_tx.max(initial=0) <= 1 and cnt_rx.max(initial=0) <= 1:
+            rates[idx] = ww * np.maximum(
+                0.0, np.minimum(avail_tx[s] / ww, avail_rx[d] / ww))
+            break
+        wt = np.bincount(s, weights=ww, minlength=n)
+        wr = np.bincount(d, weights=ww, minlength=n)
+        safe_t = np.where(cnt_tx > 0, wt, 1.0)
+        safe_r = np.where(cnt_rx > 0, wr, 1.0)
+        ratio_tx = np.where(cnt_tx > 0, avail_tx / safe_t, math.inf)
+        ratio_rx = np.where(cnt_rx > 0, avail_rx / safe_r, math.inf)
+        m = min(ratio_tx.min(), ratio_rx.min())
+        # first-occurrence position of each endpoint in the reference's
+        # interleaved insertion stream (tx of flow i at 2i, rx at 2i+1)
+        pos = np.arange(idx.size, dtype=np.int64)
+        post = np.full(n, 2 * idx.size, dtype=np.int64)
+        posr = np.full(n, 2 * idx.size, dtype=np.int64)
+        np.minimum.at(post, s, 2 * pos)
+        np.minimum.at(posr, d, 2 * pos + 1)
+        cand_t = np.flatnonzero(ratio_tx == m)
+        cand_r = np.flatnonzero(ratio_rx == m)
+        best_t = int(post[cand_t].min()) if cand_t.size else 2 * idx.size
+        best_r = int(posr[cand_r].min()) if cand_r.size else 2 * idx.size
+        if best_t < best_r:
+            b = int(cand_t[np.argmin(post[cand_t])])
+            share = max(0.0, float(avail_tx[b]) / float(wt[b]))
+            frozen = s == b
+        else:
+            b = int(cand_r[np.argmin(posr[cand_r])])
+            share = max(0.0, float(avail_rx[b]) / float(wr[b]))
+            frozen = d == b
+        fi = idx[frozen]
+        r = w[fi] * share
+        rates[fi] = r
+        np.subtract.at(avail_tx, src[fi], r)
+        np.subtract.at(avail_rx, dst[fi], r)
+        alive[fi] = False
+    return rates
+
+
+def fair_share_fast(flows: Sequence[_Transfer], cap) -> dict[int, float]:
+    """Vectorized drop-in for :func:`fair_share`: same flows-and-capacity
+    interface (anything with ``.tid/.src/.dst/.weight`` duck-types), same
+    dict result, bit-identical rates (pinned by the property suite in
+    ``tests/test_fill_equiv.py``).  The engine's incremental path and the
+    static cost analyzer both go through the same kernel."""
+    if not flows:
+        return {}
+    F = len(flows)
+    tids = np.fromiter((f.tid for f in flows), np.int64, F)
+    src = np.fromiter((f.src for f in flows), np.int64, F)
+    dst = np.fromiter((f.dst for f in flows), np.int64, F)
+    w = np.fromiter((f.weight for f in flows), np.float64, F)
+    n = int(max(src.max(), dst.max())) + 1
+    avail_tx = np.zeros(n)
+    avail_rx = np.zeros(n)
+    for r in np.unique(src).tolist():
+        avail_tx[r] = cap(r)
+    for r in np.unique(dst).tolist():
+        avail_rx[r] = cap(r)
+    rates = _fill_vec(src, dst, w, avail_tx, avail_rx, n)
+    return dict(zip(tids.tolist(), rates.tolist()))
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -533,7 +658,15 @@ class EventSimulator:
             tuple[Failure, Mapping[int, float] | None]] = (),
         telemetry: Telemetry | None = None,
         verify_replans: bool = False,
+        fill: str = "fast",
     ):
+        if fill not in ("fast", "reference"):
+            raise EventSimError(
+                f"fill must be 'fast' or 'reference', got {fill!r}")
+        #: water-fill backend: "fast" = incremental vectorized fill
+        #: (bit-identical to the reference, pinned by tests/test_fill_equiv),
+        #: "reference" = the exported _fair_share on every epoch
+        self.fill = fill
         if streams is None:
             if prog is None or total_bytes is None:
                 raise EventSimError(
@@ -601,6 +734,16 @@ class EventSimulator:
         self.healthy_caps = [self.caps.capacity(r) for r in range(n)]
 
         self.transfers: list[_Transfer] = []
+        # structure-of-arrays mirror of the per-transfer hot fields, indexed
+        # by tid; extended in _instantiate so the run loop and the fill can
+        # stay vectorized (the dataclass keeps the cold control-plane state)
+        self._t_src = np.empty(0, np.int64)
+        self._t_dst = np.empty(0, np.int64)
+        self._t_w = np.empty(0, np.float64)
+        self._t_size = np.empty(0, np.float64)
+        self._t_eps = np.empty(0, np.float64)   # completion epsilon per tid
+        self._rem = np.empty(0, np.float64)     # remaining bytes per tid
+        self._rates_full = np.empty(0, np.float64)  # last fair share per tid
         self._segstate: list[_SegState] = []
         self.segment_finish: list[float] = []
         #: per-segment payload buffers, parallel to ``_segstate`` (None for
@@ -623,6 +766,9 @@ class EventSimulator:
         # event queue: (time, seq, kind, arg)
         self._events: list[tuple[float, int, str, object]] = []
         self._seq = 0
+        # queued events that are not sampling ticks — the stall guard in
+        # _sample() reads this instead of rescanning the whole queue
+        self._pending_nonsample = 0
         # Degradations carried over from a previous collective (a training
         # campaign's earlier iteration): installed before t=0 with their
         # control-plane capacity factors, WITHOUT consulting the controller
@@ -670,13 +816,37 @@ class EventSimulator:
         # and every engine event lands in the structured trace
         self.telemetry = telemetry
         self._sample_seq = 0
-        # water-fill memo: the run loop recomputes the global fair share
-        # only when the flow set or link capacities changed since the last
-        # iteration (sampling ticks in particular leave both untouched)
+        # water-fill memo: the run loop recomputes the fair share only when
+        # the flow set or link capacities changed since the last iteration
+        # (sampling ticks in particular leave both untouched), and the fast
+        # fill recomputes only the connected components holding a dirtied
+        # (tx/rx, rank) endpoint — untouched flows keep their cached rates
         self._flows_epoch = 0
         self._rates_epoch = -1
-        self._cur_rates: dict[int, float] = {}
-        self._cur_active: list[_Transfer] = []
+        # endpoint codes (rank << 1 | is_rx) whose flow set or capacity
+        # changed since the last fill; _dirty_all forces a full refill
+        self._dirty_eps: set[int] = set()
+        self._dirty_all = True
+        self._cap_dirty: set[int] = set()
+        # active-set membership epoch: bumping it invalidates the sorted
+        # tid array without forcing capacity-only epochs to re-sort
+        self._members_epoch = 0
+        self._act_built_epoch = -1
+        self._act_tids = np.empty(0, np.int64)
+        self._act_src = np.empty(0, np.int64)
+        self._act_dst = np.empty(0, np.int64)
+        self._act_w = np.empty(0, np.float64)
+        self._act_rates = np.empty(0, np.float64)
+        self._rates_dict_cache: dict[int, float] = {}
+        self._rates_dict_epoch = -2
+        #: refill counters (diagnostics + perf tests): full recomputes vs
+        #: incremental component-scoped ones
+        self.fill_full_recomputes = 0
+        self.fill_partial_recomputes = 0
+        # per-rank capacity vector mirroring caps.capacity, refreshed only
+        # for capacity-dirty ranks (post initial_failures state)
+        self._cap_vec = np.array(
+            [self.caps.capacity(r) for r in range(self.n)], np.float64)
         self._last_sample_t = 0.0
         self._last_tx = {r: 0.0 for r in range(self.n)}
         self._last_good = [0.0] * len(self._streams)
@@ -712,6 +882,8 @@ class EventSimulator:
     def _push(self, t: float, kind: str, arg: object) -> None:
         heapq.heappush(self._events, (t, self._seq, kind, arg))
         self._seq += 1
+        if kind != "sample":
+            self._pending_nonsample += 1
 
     def _instantiate(self, prog: CollectiveProgram, total_bytes: float,
                      stream: _StreamState) -> list[_Transfer]:
@@ -784,6 +956,23 @@ class EventSimulator:
                 t.deps = len(prereqs)
                 for p in sorted(prereqs):
                     self.transfers[p].dependents.append(t.tid)
+        if new:
+            m = len(new)
+            sizes = np.fromiter((t.size for t in new), np.float64, m)
+            self._t_src = np.concatenate(
+                [self._t_src, np.fromiter((t.src for t in new), np.int64, m)])
+            self._t_dst = np.concatenate(
+                [self._t_dst, np.fromiter((t.dst for t in new), np.int64, m)])
+            self._t_w = np.concatenate(
+                [self._t_w,
+                 np.fromiter((t.weight for t in new), np.float64, m)])
+            self._t_size = np.concatenate([self._t_size, sizes])
+            # size-relative completion epsilon: float residue in the
+            # remaining bytes must not stall the clock
+            self._t_eps = np.concatenate(
+                [self._t_eps, np.maximum(1e-9, 1e-9 * sizes)])
+            self._rem = np.concatenate([self._rem, np.zeros(m)])
+            self._rates_full = np.concatenate([self._rates_full, np.zeros(m)])
         return new
 
     def _init_stream_data(
@@ -907,11 +1096,25 @@ class EventSimulator:
         t.state = _LATENT
         self._push(now + self.alpha + extra_delay, "activate", t.tid)
 
+    def _touch_flow(self, t: _Transfer) -> None:
+        """Mark a flow's endpoints dirty: its component must be refilled."""
+        self._dirty_eps.add(t.src << 1)
+        self._dirty_eps.add((t.dst << 1) | 1)
+
+    def _touch_cap(self, rank: int) -> None:
+        """Mark a rank's capacity dirty: both its endpoints refill, and the
+        cached capacity vector refreshes at the next fill."""
+        self._cap_dirty.add(rank)
+        self._dirty_eps.add(rank << 1)
+        self._dirty_eps.add((rank << 1) | 1)
+
     def _activate(self, now: float, t: _Transfer) -> None:
         t.state = _ACTIVE
-        t.remaining = t.size
+        self._rem[t.tid] = t.size
         self._active.add(t.tid)
         self._flows_epoch += 1
+        self._members_epoch += 1
+        self._touch_flow(t)
         self._snapshot(t)
         self._trace("transfer_start", now, tid=t.tid, seg=t.seg,
                     stream=self._stream_name(t.stream), src=t.src, dst=t.dst,
@@ -919,9 +1122,11 @@ class EventSimulator:
 
     def _complete(self, now: float, t: _Transfer) -> None:
         t.state = _DONE
-        t.remaining = 0.0
+        self._rem[t.tid] = 0.0
         self._active.discard(t.tid)
         self._flows_epoch += 1
+        self._members_epoch += 1
+        self._touch_flow(t)
         self._deliver(t)
         e = (t.src, t.dst)
         self.link_bytes[e] = self.link_bytes.get(e, 0.0) + t.size
@@ -951,7 +1156,7 @@ class EventSimulator:
         """DMA rollback: bytes already streamed are retransmitted; the
         transfer restarts (on a healthy rail) after the repair latency —
         the closed-form constant, or the control plane's derived delay."""
-        sent = t.size - t.remaining
+        sent = t.size - float(self._rem[t.tid])
         self.retransmitted_bytes += sent
         self.rank_tx[t.src] += sent          # wasted egress really happened
         self.rank_retrans[t.src] += sent
@@ -966,6 +1171,8 @@ class EventSimulator:
         t.state = _LATENT
         self._active.discard(t.tid)
         self._flows_epoch += 1
+        self._members_epoch += 1
+        self._touch_flow(t)
         d = self.repair_latency if delay is None else delay
         self._trace("rollback", now, tid=t.tid, stream=st.spec.name,
                     src=t.src, dst=t.dst, sent_bytes=sent, delay=d)
@@ -987,13 +1194,14 @@ class EventSimulator:
             confirm_at = None
             if self.controller is not None and not f.silent:
                 confirm_at = self.controller.on_recover(self, now, f)
-            if confirm_at is not None and confirm_at > now + 1e-15:
+            if confirm_at is not None and confirm_at > now + _time_tol(now):
                 self._push(confirm_at, "confirm", f)
             else:
                 self._confirm_recovery(now, f)
             return
         self.caps.fail(rank, f)
         self._flows_epoch += 1
+        self._touch_cap(rank)
         self._trace("failure", now, node=f.node, rail=f.rail,
                     kind=f.ftype.value, severity=f.severity, silent=f.silent)
         # Consult the co-simulated control plane *at the failure instant*:
@@ -1009,6 +1217,7 @@ class EventSimulator:
         if decision is not None and decision.capacity_scale:
             for r, factor in decision.capacity_scale.items():
                 self.caps.scale(r, f, factor)
+                self._touch_cap(r)
             self._flows_epoch += 1
         if f.severity >= 1.0 and f.escalates:
             # A hard NIC death interrupts the node's striped channels: every
@@ -1041,7 +1250,8 @@ class EventSimulator:
         while this confirmation was pending (flap down again before the
         tick), the probe finds it down and must NOT clear the controller's
         failure state — that later failure's own recovery will."""
-        self.caps.recover(f.node, f)
+        for r in self.caps.recover(f.node, f):
+            self._touch_cap(r)
         self._flows_epoch += 1
         if self.caps.rail_dead(f.node, f.rail):
             return
@@ -1154,7 +1364,7 @@ class EventSimulator:
             if t.stream == stream_idx and t.state in (_BLOCKED, _LATENT,
                                                       _ACTIVE):
                 if t.state == _ACTIVE:
-                    sent = t.size - t.remaining
+                    sent = t.size - float(self._rem[t.tid])
                     self.retransmitted_bytes += sent
                     strm.retransmitted_bytes += sent
                     strm.moved_bytes += sent
@@ -1162,6 +1372,8 @@ class EventSimulator:
                     self.rank_retrans[t.src] += sent
                     e = (t.src, t.dst)
                     self.link_bytes[e] = self.link_bytes.get(e, 0.0) + sent
+                    self._members_epoch += 1
+                    self._touch_flow(t)
                 t.state = _CANCELLED
                 t.payload = None
                 self._active.discard(t.tid)
@@ -1280,7 +1492,7 @@ class EventSimulator:
         # reuse the run loop's water-fill from the interval that just
         # elapsed — exactly what a monitoring snapshot of that window saw;
         # recomputing here would double the fair-share cost per tick
-        rates = self._cur_rates
+        rates = self._rates_dict()
         inflight = [0] * self.n
         share = [0.0] * self.n
         for t in active:
@@ -1313,7 +1525,7 @@ class EventSimulator:
         if tm.observer is not None:
             tm.observer.on_sample(self, now)
         elif (self._remaining > 0
-              and not any(k != "sample" for _, _, k, _ in self._events)
+              and self._pending_nonsample == 0
               and not any(rates.get(t.tid, 0.0) > 0 for t in active)):
             # With no detector attached, a fully stalled fabric must still
             # raise: the sampling ticks alone would keep the event clock
@@ -1355,6 +1567,7 @@ class EventSimulator:
         if decision.capacity_scale:
             for r, factor in decision.capacity_scale.items():
                 self.caps.scale(r, failure, factor)
+                self._touch_cap(r)
             self._flows_epoch += 1
         if decision.replan is not None:
             target = self._resolve_stream(decision.replan_stream)
@@ -1364,7 +1577,8 @@ class EventSimulator:
     def revoke_inferred(self, failure: Failure) -> None:
         """Lift every capacity factor installed for an inferred failure —
         the detector observed the rank's measured bandwidth recover."""
-        self.caps.recover(failure.node, failure)
+        for r in self.caps.recover(failure.node, failure):
+            self._touch_cap(r)
         self._flows_epoch += 1
 
     # -- cross-run state -----------------------------------------------------
@@ -1375,6 +1589,97 @@ class EventSimulator:
         Deterministically ordered by (at_time, node, rail)."""
         return sorted(self.caps.active().items(),
                       key=lambda kv: (kv[0].at_time, kv[0].node, kv[0].rail))
+
+    # -- water-fill ----------------------------------------------------------
+    def _rates_dict(self) -> dict[int, float]:
+        """Per-tid view of the last computed fair share (the sampler's
+        stale-by-design window view), built lazily per fill epoch."""
+        if self._rates_dict_epoch != self._rates_epoch:
+            self._rates_dict_cache = dict(
+                zip(self._act_tids.tolist(), self._act_rates.tolist()))
+            self._rates_dict_epoch = self._rates_epoch
+        return self._rates_dict_cache
+
+    #: bounded component-closure expansion rounds; a component whose
+    #: endpoint-sharing chain is deeper than this falls back to a full
+    #: refill (always correct: refilling a superset of the affected
+    #: components reproduces the reference exactly)
+    _BFS_ROUNDS = 16
+
+    def _affected(self, src: np.ndarray, dst: np.ndarray) -> np.ndarray | None:
+        """Boolean mask over the active flows of every connected component
+        containing a dirty endpoint, or None if the closure did not
+        converge within _BFS_ROUNDS.  Flows never span components, so
+        refilling exactly these (with fresh endpoint capacity) while the
+        rest keep their cached rates is bit-identical to a full fill."""
+        dirty = self._dirty_eps
+        if not dirty:
+            return np.zeros(src.shape[0], dtype=bool)
+        mark = np.zeros(2 * self.n, dtype=bool)
+        mark[np.fromiter(dirty, np.int64, len(dirty))] = True
+        cs = src << 1
+        cd = (dst << 1) | 1
+        aff = mark[cs] | mark[cd]
+        grown_count = int(aff.sum())
+        for _ in range(self._BFS_ROUNDS):
+            mark[cs[aff]] = True
+            mark[cd[aff]] = True
+            grown = mark[cs] | mark[cd]
+            count = int(grown.sum())
+            if count == grown_count:
+                return grown
+            aff = grown
+            grown_count = count
+        return None
+
+    def _refill(self) -> None:
+        """Recompute the weighted max-min fair share for the current epoch.
+
+        The sorted active-tid array is rebuilt only when membership
+        changed (capacity-only epochs reuse it), and the fast fill
+        recomputes only the components reached from dirty endpoints —
+        everything else keeps its cached rate from ``_rates_full``.
+        """
+        if self._members_epoch != self._act_built_epoch:
+            self._act_tids = np.fromiter(
+                sorted(self._active), np.int64, len(self._active))
+            self._act_built_epoch = self._members_epoch
+            self._act_src = self._t_src[self._act_tids]
+            self._act_dst = self._t_dst[self._act_tids]
+            self._act_w = self._t_w[self._act_tids]
+        if self._cap_dirty:
+            for r in sorted(self._cap_dirty):
+                self._cap_vec[r] = self.caps.capacity(r)
+            self._cap_dirty.clear()
+        tids = self._act_tids
+        if self.fill == "reference":
+            active = [self.transfers[i] for i in tids.tolist()]
+            rates = _fair_share(active, self.caps.capacity) if active else {}
+            out = np.fromiter(
+                (rates[i] for i in tids.tolist()), np.float64, tids.size)
+            self._rates_full[tids] = out
+            self._act_rates = out
+        else:
+            src, dst, w = self._act_src, self._act_dst, self._act_w
+            sel = (None if self._dirty_all or not tids.size
+                   else self._affected(src, dst))
+            if sel is None:
+                if tids.size:
+                    self._rates_full[tids] = _fill_vec(
+                        src, dst, w, self._cap_vec.copy(),
+                        self._cap_vec.copy(), self.n)
+                self.fill_full_recomputes += 1
+            else:
+                if sel.any():
+                    k = np.flatnonzero(sel)
+                    self._rates_full[tids[k]] = _fill_vec(
+                        src[k], dst[k], w[k], self._cap_vec.copy(),
+                        self._cap_vec.copy(), self.n)
+                self.fill_partial_recomputes += 1
+            self._act_rates = self._rates_full[tids]
+        self._dirty_eps.clear()
+        self._dirty_all = False
+        self._rates_epoch = self._flows_epoch
 
     # -- main loop -----------------------------------------------------------
     def _start_stream(self, now: float, stream_idx: int) -> None:
@@ -1396,38 +1701,36 @@ class EventSimulator:
                 self._push(st.spec.start_time, "start", st.index)
 
         guard = 0
+        events = self._events
         while self._remaining > 0:
             guard += 1
             if guard > self._max_iters:
                 raise EventSimError("event loop not converging")
             if self._rates_epoch != self._flows_epoch:
-                active = [self.transfers[i] for i in sorted(self._active)]
-                rates = (_fair_share(active, self.caps.capacity)
-                         if active else {})
-                self._cur_active = active
-                self._cur_rates = rates
-                self._rates_epoch = self._flows_epoch
+                self._refill()
+            tids = self._act_tids
+            rates = self._act_rates
+
+            # earliest completion among active flows: a flow is a candidate
+            # when it has bandwidth (or zero bytes); its finish is now for
+            # sub-epsilon residue, now + remaining/rate otherwise
+            if tids.size:
+                rem = self._rem[tids]
+                eps = self._t_eps[tids]
+                cand = (rates > 0.0) | (self._t_size[tids] <= 0.0)
+                if cand.any():
+                    dur = np.divide(rem, rates, out=np.zeros_like(rem),
+                                    where=rates > 0.0)
+                    dur[rem <= eps] = 0.0
+                    t_complete = float(np.min(now + dur[cand]))
+                else:
+                    t_complete = math.inf
             else:
-                active = self._cur_active
-                rates = self._cur_rates
-
-            # earliest completion among active flows (size-relative epsilon:
-            # float residue in `remaining` must not stall the clock)
-            def eps(t: _Transfer) -> float:
-                return max(1e-9, 1e-9 * t.size)
-
-            t_complete = math.inf
-            for t in active:
-                r = rates.get(t.tid, 0.0)
-                if r > 0 or t.size <= 0:
-                    t_complete = min(
-                        t_complete,
-                        now + (0.0 if t.remaining <= eps(t)
-                               else t.remaining / r))
-            t_event = self._events[0][0] if self._events else math.inf
+                t_complete = math.inf
+            t_event = events[0][0] if events else math.inf
             t_next = min(t_complete, t_event)
             if math.isinf(t_next):
-                stalled = [t.tid for t in active]
+                stalled = tids.tolist()
                 blocked = [t.tid for t in self.transfers
                            if t.state in (_BLOCKED, _LATENT)]
                 raise StalledError(
@@ -1437,24 +1740,26 @@ class EventSimulator:
 
             # stream bytes until t_next
             dt = t_next - now
-            if dt > 0:
-                for t in active:
-                    drained = rates.get(t.tid, 0.0) * dt
-                    t.remaining = max(0.0, t.remaining - drained)
+            if dt > 0 and tids.size:
+                self._rem[tids] = np.maximum(0.0, rem - rates * dt)
             now = t_next
 
             # completions strictly before/at events at the same timestamp:
             # finish flows first so dependents can react to the event epoch
-            completed = [t for t in active
-                         if t.remaining <= eps(t)
-                         and (rates.get(t.tid, 0.0) > 0 or t.size <= 0)]
-            for t in completed:
-                self._complete(now, t)
-                self._remaining -= 1
-                self.events_processed += 1
+            if tids.size:
+                done = (self._rem[tids] <= eps) & cand
+                for tid in tids[done].tolist():
+                    self._complete(now, self.transfers[tid])
+                    self._remaining -= 1
+                    self.events_processed += 1
 
-            while self._events and self._events[0][0] <= now + 1e-15:
-                _, _, kind, arg = heapq.heappop(self._events)
+            # pop the whole same-timestamp bucket in one pass (tolerance
+            # relative to the clock: see _time_tol)
+            horizon = now + _time_tol(now)
+            while events and events[0][0] <= horizon:
+                _, _, kind, arg = heapq.heappop(events)
+                if kind != "sample":
+                    self._pending_nonsample -= 1
                 self.events_processed += 1
                 if kind == "activate":
                     t = self.transfers[arg]
@@ -1536,6 +1841,7 @@ def simulate_program(
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
     telemetry: Telemetry | None = None,
     verify_replans: bool = False,
+    fill: str = "fast",
 ) -> EventSimReport:
     """Execute ``prog`` on the discrete-event engine.
 
@@ -1556,7 +1862,7 @@ def simulate_program(
         alpha=alpha, failures=failures, rank_data=rank_data,
         repair_latency=repair_latency, controller=controller,
         initial_failures=initial_failures, telemetry=telemetry,
-        verify_replans=verify_replans,
+        verify_replans=verify_replans, fill=fill,
     ).run()
 
 
@@ -1573,6 +1879,7 @@ def simulate_streams(
     initial_failures: Sequence[tuple[Failure, Mapping[int, float] | None]] = (),
     telemetry: Telemetry | None = None,
     verify_replans: bool = False,
+    fill: str = "fast",
 ) -> EventSimReport:
     """Co-simulate a set of concurrent collective streams on one fabric.
 
@@ -1591,7 +1898,7 @@ def simulate_streams(
         streams=streams, cluster=cluster, capacities=capacities, g=g,
         alpha=alpha, failures=failures, repair_latency=repair_latency,
         controller=controller, initial_failures=initial_failures,
-        telemetry=telemetry, verify_replans=verify_replans,
+        telemetry=telemetry, verify_replans=verify_replans, fill=fill,
     ).run()
 
 

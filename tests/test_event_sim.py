@@ -518,3 +518,74 @@ def test_scenario_unsupported_failure_ignored_by_planner():
     # out-of-scope failures are not transport events: nothing degrades
     assert sc["overhead"] == pytest.approx(0.0, abs=1e-9)
     assert sc["failovers"] == 0
+
+
+# ---------------------------------------------------------------------------
+# event-loop float-time hazards + stall-guard contract (PR 10 satellites)
+# ---------------------------------------------------------------------------
+
+def test_time_tolerance_tracks_clock_ulp():
+    """The same-timestamp bucket tolerance must stay above one float ulp of
+    the clock (or co-timestamped events split across loop iterations once
+    now > ~10 s) while staying far below alpha (or genuinely distinct
+    rounds would merge)."""
+    import math as _math
+
+    from repro.core.event_sim import _time_tol
+
+    for now in (0.0, 1.0, 30.0, 1e4, 16384.0, 1e6):
+        assert _time_tol(now) >= _math.ulp(now)
+        assert _time_tol(now) < DEFAULT_ALPHA / 100
+
+
+def test_co_timestamped_events_bucket_at_large_clock():
+    """Two arrivals at the same logical instant, computed through different
+    float associations — ``(t + a) + b`` vs ``t + (a + b)`` — genuinely
+    diverge by ulps at a large clock value; the pop tolerance must still
+    bucket them (the old absolute 1e-15 epsilon could not)."""
+    from repro.core.event_sim import _time_tol
+
+    t0, a = 16384.0, 1.5e-3
+    for k in range(1, 64):
+        b = 5e-6 * k
+        direct, chained = t0 + (a + b), (t0 + a) + b
+        if direct != chained:
+            break
+    else:  # pragma: no cover - float paths always diverge somewhere
+        pytest.fail("no diverging association found")
+    gap = abs(direct - chained)
+    assert gap > 1e-15                              # old epsilon splits them
+    assert gap <= _time_tol(min(direct, chained))   # new tolerance buckets
+
+
+def test_large_start_offset_timeline_translates():
+    """A stream launched 2^14 s into the campaign must process the same
+    events and move the same bytes as at t=0 — the event-time bucketing
+    may not degrade with the clock magnitude."""
+    n, payload, bw = 6, 300e6, 50e9
+    prog = ring_program(list(range(n)), n)
+    off = float(1 << 14)
+    base = simulate_streams([Stream("m", prog, payload)],
+                            capacities=[bw] * n, g=8)
+    late = simulate_streams([Stream("m", prog, payload, start_time=off)],
+                            capacities=[bw] * n, g=8)
+    assert late.events == base.events + 1       # one extra timed start event
+    assert late.link_bytes == base.link_bytes
+    assert late.retransmitted_bytes == base.retransmitted_bytes
+    assert late.completion_time == pytest.approx(base.completion_time + off,
+                                                 rel=1e-9)
+
+
+def test_all_rails_dead_stalls_with_telemetry_attached():
+    """The no-observer stall guard (now an O(active) counter check, not a
+    full event-queue rescan) must still raise StalledError when sampling
+    ticks alone keep the queue alive on a dead fabric."""
+    from repro.core.telemetry import Telemetry
+
+    n = 4
+    prog = ring_program(list(range(n)), n)
+    fails = [nic_down_at(1, r, 1e-5) for r in range(8)]
+    tm = Telemetry(sample_period=5e-5)
+    with pytest.raises(StalledError):
+        simulate_program(prog, 100e6, capacities=[50e9] * n, g=8,
+                         failures=fails, telemetry=tm)
